@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Hillclimb microscope: compile one (arch x shape x mesh) and report the
+top collectives / dots by loop-multiplied traffic, with the jax op_name
+that produced each (metadata=... in the HLO) — this is how §Perf
+hypotheses are formed.
+
+    PYTHONPATH=src python -m benchmarks.inspect_hlo --arch grok-1-314b \
+        --shape train_4k [--top 15] [--override remat=none]
+"""
+import argparse
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+sys.path.insert(0, str(REPO / "src"))
+
+from benchmarks.roofline import (_COMP_HDR, _DEF_RE, _exec_counts,
+                                 _parse_computations, parse_collectives,
+                                 _SHAPE_RE, _CDIMS_RE, _LHS_RE)
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def top_ops(text: str, top: int = 15):
+    comps, entry = _parse_computations(text)
+    counts = _exec_counts(comps, entry)
+    colls, dots = [], []
+    for name, comp in comps.items():
+        mult = counts.get(name, 0.0)
+        if mult == 0:
+            continue
+        for line in comp["lines"]:
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            op = dm.group(3)
+            meta = _META_RE.search(line)
+            src = meta.group(1) if meta else "?"
+            if op in ("all-reduce", "all-gather", "reduce-scatter",
+                      "all-to-all", "collective-permute") or \
+                    op.endswith("-start"):
+                ops = parse_collectives(line)
+                if ops:
+                    o = ops[0]
+                    colls.append((o.traffic * mult, o.kind, mult,
+                                  dm.group(2)[:40], src))
+            elif op == "dot":
+                sm = _SHAPE_RE.match(dm.group(2))
+                if not sm:
+                    continue
+                out_numel = 1
+                for d in sm.group(2).split(","):
+                    if d:
+                        out_numel *= int(d)
+                lm = _LHS_RE.search(line[line.index("dot("):])
+                cm = _CDIMS_RE.search(line)
+                k = 1
+                if lm and cm and lm.group(1) in comp["shapes"]:
+                    lhs = comp["shapes"][lm.group(1)][1]
+                    for ci in (int(x) for x in cm.group(1).split(",") if x):
+                        if ci < len(lhs):
+                            k *= lhs[ci]
+                dots.append((2.0 * out_numel * k * mult, mult,
+                             dm.group(2)[:40], src))
+    return (sorted(colls, reverse=True)[:top],
+            sorted(dots, reverse=True)[:top])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--override", default=None,
+                    help="k=v[,k=v] ArchConfig overrides")
+    args = ap.parse_args()
+
+    override = {}
+    if args.override:
+        for kv in args.override.split(","):
+            k, v = kv.split("=")
+            override[k] = (int(v) if v.isdigit() else
+                           v == "True" if v in ("True", "False") else v)
+
+    from repro.launch import dryrun
+    rec = dryrun.dryrun_one(args.arch, args.shape, args.mesh == "multi",
+                            save=False, force=True,
+                            override=override or None)
+    print(f"== {rec['tag']} roofline: {rec['roofline']} ==")
+
+    # recompile to get the text (dryrun_one doesn't keep it)
+    # cheaper: reuse its internals — just re-lower here
+    import jax
+    text = dryrun._LAST_HLO
+    colls, dots = top_ops(text, args.top)
+    print(f"\n-- top {args.top} collectives (traffic x loop multiplier) --")
+    for traffic, kind, mult, shape, src in colls:
+        print(f"  {traffic/1e9:10.2f} GB  {kind:18s} x{mult:<6.0f} {shape:40s} {src[:80]}")
+    print(f"\n-- top {args.top} dots --")
+    for flops, mult, shape, src in dots:
+        print(f"  {flops/1e12:10.2f} TF  x{mult:<6.0f} {shape:40s} {src[:80]}")
+
+
+if __name__ == "__main__":
+    main()

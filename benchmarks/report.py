@@ -1,0 +1,124 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.report [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+RESULTS = REPO / "benchmarks" / "results" / "dryrun"
+
+ARCH_ORDER = ["llava_next_34b", "falcon_mamba_7b", "h2o_danube_1_8b",
+              "mistral_large_123b", "whisper_base", "olmoe_1b_7b",
+              "grok_1_314b", "qwen2_72b", "recurrentgemma_2b",
+              "internlm2_20b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str):
+    rows = []
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            p = RESULTS / f"{arch}__{shape}__{mesh}.json"
+            if not p.exists():
+                continue
+            rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def fmt(x, digits=3):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) >= 0.01:
+        return f"{x:.{digits}f}"
+    return f"{x:.2e}"
+
+
+def table(mesh: str, md: bool = True) -> str:
+    rows = load(mesh)
+    out = []
+    hdr = ("| arch | shape | step | compute s | memory s | collective s | "
+           "dominant | HLO TFLOP/dev | coll GB/dev | useful ratio | "
+           "HBM GB/dev |")
+    sep = "|" + "---|" * 11
+    out.append(hdr)
+    out.append(sep)
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['tag'].split('__')[0]} | "
+                       f"{r['tag'].split('__')[1]} | - | - | - | - | "
+                       f"SKIP (quadratic @524k) | - | - | - | - |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | "
+            f"{fmt(t['compute_s'])} | {fmt(t['memory_s'])} | "
+            f"{fmt(t['collective_s'])} | **{t['dominant'][:-2]}** | "
+            f"{r['flops_per_dev']/1e12:.2f} | "
+            f"{r['collectives']['traffic_bytes']/1e9:.2f} | "
+            f"{fmt(r.get('useful_ratio'), 3)} | {hbm:.2f} |")
+    return "\n".join(out)
+
+
+def summary(mesh: str) -> dict:
+    rows = [r for r in load(mesh) if r["status"] == "ok"]
+    doms = {}
+    for r in rows:
+        doms.setdefault(r["roofline"]["dominant"], []).append(r["tag"])
+    worst_useful = sorted(
+        (r for r in rows if r.get("useful_ratio")),
+        key=lambda r: r["useful_ratio"])[:5]
+    most_coll = sorted(rows, key=lambda r: -r["roofline"]["collective_s"])[:5]
+    return {
+        "n_ok": len(rows),
+        "dominant_counts": {k: len(v) for k, v in doms.items()},
+        "worst_useful_ratio": [(r["tag"], round(r["useful_ratio"], 4))
+                               for r in worst_useful],
+        "most_collective_bound": [(r["tag"],
+                                   f"{r['roofline']['collective_s']:.3f}s")
+                                  for r in most_coll],
+    }
+
+
+def compare(mesh: str) -> str:
+    """baseline (results/dryrun_baseline) vs optimized (results/dryrun)."""
+    base_dir = RESULTS.parent / "dryrun_baseline"
+    out = ["| arch | shape | term | baseline s | optimized s | x |",
+           "|---|---|---|---|---|---|"]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            bp = base_dir / f"{arch}__{shape}__{mesh}.json"
+            op = RESULTS / f"{arch}__{shape}__{mesh}.json"
+            if not (bp.exists() and op.exists()):
+                continue
+            b, o = json.loads(bp.read_text()), json.loads(op.read_text())
+            if b.get("status") != "ok" or o.get("status") != "ok":
+                continue
+            bb, ob = b["roofline"]["bound_s"], o["roofline"]["bound_s"]
+            if bb <= 0:
+                continue
+            out.append(
+                f"| {arch} | {shape} | {o['roofline']['dominant'][:-2]} | "
+                f"{fmt(bb)} | {fmt(ob)} | {bb/ob:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--compare", action="store_true")
+    args = ap.parse_args()
+    if args.compare:
+        print(compare(args.mesh))
+    else:
+        print(table(args.mesh))
+        print()
+        print(json.dumps(summary(args.mesh), indent=2))

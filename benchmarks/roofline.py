@@ -1,0 +1,307 @@
+"""Roofline term derivation from compiled dry-run artifacts.
+
+Terms per (arch x shape x mesh), all in SECONDS on TPU v5e constants:
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = collective_bytes_per_device / ICI_BW
+
+``compiled.cost_analysis()`` is the per-device SPMD program's cost, so no
+further division by chip count is needed. collective bytes are parsed from
+the post-optimization HLO text: for each all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute we take
+max(operand bytes, result bytes) as the traffic proxy (operand-only would
+undercount all-gather, result-only would undercount reduce-scatter).
+
+MODEL_FLOPS (the "useful compute" yardstick):
+  train   6 * N * tokens        (fwd 2ND + bwd 4ND)
+  prefill 2 * N * tokens
+  decode  2 * N * batch         (one token per sequence)
+with N = active params for MoE. The ratio MODEL_FLOPS / HLO_FLOPS exposes
+remat recompute, masked-chunk waste and padding overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+# ---- TPU v5e hardware constants (per chip) ---- #
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    operand_bytes: int
+
+    @property
+    def traffic(self) -> int:
+        return max(self.result_bytes, self.operand_bytes)
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    """Scan post-optimization HLO for collective ops (async: -start only)."""
+    out: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        m = re.match(r"(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*) ?"
+                     r"([a-z0-9-]+)(?:-start)?\(", rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in _COLLECTIVES:
+            continue
+        if "-done" in rhs.split("(")[0]:
+            continue
+        # result shapes: all shape literals before the op name (handles
+        # tuple-result variadic collectives); operands live in the call parens
+        call_at = m.end() - 1
+        result_bytes = sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(rhs[:m.start(1)]))
+        # operand shapes: inside the call parens (attrs after ')' have none)
+        depth, end = 0, len(rhs)
+        for i in range(call_at, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_bytes = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(rhs[call_at:end]))
+        out.append(CollectiveOp(op, result_bytes, operand_bytes))
+    return out
+
+
+def collective_summary(hlo_text: str) -> Dict[str, float]:
+    ops = parse_collectives(hlo_text)
+    by_kind: Dict[str, float] = {}
+    for o in ops:
+        by_kind[o.kind] = by_kind.get(o.kind, 0) + o.traffic
+    return {
+        "n_ops": len(ops),
+        "traffic_bytes": float(sum(o.traffic for o in ops)),
+        "by_kind": by_kind,
+    }
+
+
+# --------------------------------------------------------------------- #
+# Loop-aware HLO analysis
+# --------------------------------------------------------------------- #
+# XLA's cost_analysis() counts a while-loop body ONCE, but our models run
+# layers (and attention chunks) under lax.scan — so dot FLOPs and
+# collective bytes must be multiplied by loop trip counts. We parse the
+# post-optimization HLO: computations, their call graph (fusion `calls=`,
+# while `condition=/body=`, `to_apply=`), and while trip counts (the s32
+# constant compared by the loop condition), then weight every dot and
+# collective by its computation's execution count.
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"([a-z0-9\-]+)\(")
+_CALL_ATTRS = (
+    ("calls", re.compile(r"calls=%?([\w.\-]+)")),
+    ("to_apply", re.compile(r"to_apply=%?([\w.\-]+)")),
+    ("cond", re.compile(r"condition=%?([\w.\-]+)")),
+    ("body", re.compile(r"body=%?([\w.\-]+)")),
+)
+_TRIP_RE = re.compile(r"s32\[\]\s*constant\((\d+)\)")
+_LHS_RE = re.compile(r"\(\s*%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _parse_computations(text: str):
+    """-> {name: {"lines": [...], "shapes": {op: (dtype, dims)}}}"""
+    comps = {}
+    cur = None
+    entry = None
+    for raw in text.splitlines():
+        m = _COMP_HDR.match(raw)
+        if m and raw.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = {"lines": [], "shapes": {}}
+            if raw.startswith("ENTRY"):
+                entry = cur
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        comps[cur]["lines"].append(raw)
+        dm = _DEF_RE.match(raw)
+        if dm:
+            name, ty, _ = dm.groups()
+            sm = _SHAPE_RE.match(ty)
+            if sm:
+                dims = tuple(int(x) for x in sm.group(2).split(",") if x)
+                comps[cur]["shapes"][name] = (sm.group(1), dims)
+    return comps, entry
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    block = "\n".join(comps.get(cond_name, {}).get("lines", []))
+    consts = [int(x) for x in _TRIP_RE.findall(block)]
+    return max(consts) if consts else 1
+
+
+def _exec_counts(comps, entry):
+    """Execution multiplier per computation (DAG accumulation)."""
+    from collections import defaultdict, deque
+    edges = defaultdict(list)            # caller -> [(callee, factor)]
+    for name, c in comps.items():
+        for line in c["lines"]:
+            if " while(" in line:
+                cm = _CALL_ATTRS[2][1].search(line)
+                bm = _CALL_ATTRS[3][1].search(line)
+                if bm:
+                    n = _trip_count(comps, cm.group(1)) if cm else 1
+                    edges[name].append((bm.group(1), n))
+                    if cm:
+                        edges[name].append((cm.group(1), n + 1))
+            else:
+                for _, rx in (_CALL_ATTRS[0], _CALL_ATTRS[1]):
+                    for callee in rx.findall(line):
+                        edges[name].append((callee, 1))
+    indeg = defaultdict(int)
+    for caller, outs in edges.items():
+        for callee, _ in outs:
+            indeg[callee] += 1
+    counts = defaultdict(float)
+    counts[entry] = 1.0
+    q = deque([entry])
+    seen_edges = defaultdict(int)
+    # Kahn over the call DAG
+    order = []
+    q = deque([n for n in comps if indeg[n] == 0])
+    while q:
+        n = q.popleft()
+        order.append(n)
+        for callee, f in edges.get(n, []):
+            indeg[callee] -= 1
+            if indeg[callee] == 0:
+                q.append(callee)
+    for n in order:
+        m = counts[n]
+        if m == 0:
+            continue
+        for callee, f in edges.get(n, []):
+            counts[callee] += m * f
+    return counts
+
+
+def _dot_flops(comp) -> float:
+    total = 0.0
+    for line in comp["lines"]:
+        dm = _DEF_RE.match(line)
+        if not dm or dm.group(3) != "dot":
+            continue
+        sm = _SHAPE_RE.match(dm.group(2))
+        if not sm:
+            continue
+        out_dims = tuple(int(x) for x in sm.group(2).split(",") if x)
+        out_numel = 1
+        for d in out_dims:
+            out_numel *= d
+        rest = line[line.index("dot("):]
+        lm = _LHS_RE.search(rest)
+        cm = _CDIMS_RE.search(line)
+        k = 1
+        if lm and cm and lm.group(1) in comp["shapes"]:
+            lhs_dims = comp["shapes"][lm.group(1)][1]
+            for ci in (int(x) for x in cm.group(1).split(",") if x):
+                if ci < len(lhs_dims):
+                    k *= lhs_dims[ci]
+        total += 2.0 * out_numel * k
+    return total
+
+
+def analyze_hlo(text: str) -> Dict[str, float]:
+    """Loop-aware per-device totals: dot FLOPs + collective traffic."""
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return {"flops": 0.0, "collective_bytes": 0.0, "n_collectives": 0,
+                "by_kind": {}}
+    counts = _exec_counts(comps, entry)
+    flops = 0.0
+    coll_bytes = 0.0
+    n_coll = 0
+    by_kind: Dict[str, float] = {}
+    for name, comp in comps.items():
+        mult = counts.get(name, 0.0)
+        if mult == 0.0:
+            continue
+        f = _dot_flops(comp)
+        if f:
+            flops += f * mult
+        block = "\n".join(comp["lines"])
+        for op in parse_collectives(block):
+            coll_bytes += op.traffic * mult
+            n_coll += mult
+            by_kind[op.kind] = by_kind.get(op.kind, 0.0) + op.traffic * mult
+    return {"flops": flops, "collective_bytes": coll_bytes,
+            "n_collectives": int(n_coll), "by_kind": by_kind}
+
+
+def memory_traffic_proxy(mem: Dict[str, int]) -> float:
+    """One-step HBM traffic estimate from buffer assignment: arguments are
+    read once, outputs written once, temporaries written + read."""
+    return (mem.get("argument_size_in_bytes", 0)
+            + mem.get("output_size_in_bytes", 0)
+            + 2 * mem.get("temp_size_in_bytes", 0))
+
+
+def model_flops(n_params: int, step: str, global_batch: int, seq: int,
+                dec_len: Optional[int] = None) -> float:
+    tokens = global_batch * (dec_len or seq)
+    if step == "train":
+        return 6.0 * n_params * tokens
+    if step == "prefill":
+        return 2.0 * n_params * tokens
+    return 2.0 * n_params * global_batch          # decode: 1 token/seq
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    compute = flops_per_dev / PEAK_FLOPS
+    memory = bytes_per_dev / HBM_BW
+    collective = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["bound_s"] = terms[dom]
+    return terms

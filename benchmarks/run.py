@@ -1,0 +1,238 @@
+"""Benchmark harness — one benchmark per paper claim/functionality.
+
+The paper is a resource paper (no numeric tables), so each benchmark
+corresponds to a system capability it claims:
+
+  B1 kge-training     six KGE models, dim=200 (paper §3): triples/s each
+  B2 serving          the three endpoints (paper §4, Fig. 1): download
+                      build time, similarity latency, top-k latency —
+                      numpy brute force (the paper's implementation) vs
+                      jnp oracle vs fused Pallas kernel (interpret on CPU),
+                      solo vs batched
+  B3 update-pipeline  release->retrain->publish->invalidate wall time
+                      across an evolving version series (paper §4 update
+                      mechanism)
+  B4 rdf2vec-walks    vectorized random-walk corpus rate (paper §3 RDF2Vec)
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--fast]
+Roofline tables come from the dry-run artifacts: see benchmarks/report.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+RESULTS = REPO / "benchmarks" / "results"
+
+
+def _time(fn, repeat=3):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+# ===================================================================== #
+def bench_kge_training(fast: bool) -> dict:
+    import jax
+    from repro.kge import make_model
+    from repro.kge.train import KGETrainer, TrainConfig
+    from repro.ontology.synthetic import GO_SPEC, generate
+
+    n_terms = 400 if fast else 2000
+    steps = 30 if fast else 100
+    kg = generate(GO_SPEC, seed=0, n_terms=n_terms)
+    cfg = TrainConfig(batch_size=512, num_negs=16, lr=1e-2)
+    out = {}
+    for name in ("transe", "transr", "distmult", "hole", "boxe", "rdf2vec"):
+        if name == "rdf2vec":
+            from repro.data import corpus, skipgram_pairs
+            walks, vocab, pad = corpus(kg, jax.random.key(0),
+                                       walks_per_entity=4, walk_length=4)
+            pairs = skipgram_pairs(walks, window=2, pad_token=pad, seed=0)
+            trips = np.stack([pairs[:, 0], np.zeros(len(pairs), np.int32),
+                              pairs[:, 1]], axis=1)
+            model = make_model(name, vocab, 1, dim=200)
+        else:
+            trips = kg.triples
+            model = make_model(name, kg.num_entities, kg.num_relations,
+                               dim=200)
+        trainer = KGETrainer(model, cfg)
+        _, _, stats = trainer.fit(trips, steps=steps)
+        out[name] = {"triples_per_s": round(stats["triples_per_s"]),
+                     "final_loss": round(stats["final_loss"], 4)}
+        print(f"  B1 {name:10s} {stats['triples_per_s']:>12,.0f} triples/s "
+              f"loss={stats['final_loss']:.4f}")
+    return out
+
+
+# ===================================================================== #
+def bench_serving(fast: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref
+
+    n = 5_000 if fast else 40_000        # paper: GO > 40k classes
+    d, k = 200, 10
+    rng = np.random.default_rng(0)
+    emb = rng.standard_normal((n, d)).astype(np.float32)
+    unit = emb / np.linalg.norm(emb, axis=1, keepdims=True)
+    ju = jnp.asarray(unit)
+
+    out = {"n_classes": n}
+
+    # --- the paper's implementation: numpy brute force, one query ------ #
+    q1 = unit[:1]
+
+    def numpy_topk():
+        s = q1 @ unit.T
+        idx = np.argpartition(-s[0], k)[:k]
+        return idx[np.argsort(-s[0][idx])]
+    t_np, _ = _time(numpy_topk)
+    out["numpy_single_ms"] = round(t_np * 1e3, 3)
+
+    # --- jnp oracle, single + batched ----------------------------------- #
+    jq1 = jnp.asarray(q1)
+    f_ref = jax.jit(lambda q: ref.topk_cosine_ref(q, ju, k))
+    jax.block_until_ready(f_ref(jq1))
+    t_ref, _ = _time(lambda: jax.block_until_ready(f_ref(jq1)))
+    out["jnp_single_ms"] = round(t_ref * 1e3, 3)
+
+    qb = jnp.asarray(unit[:64])
+    f_ref_b = jax.jit(lambda q: ref.topk_cosine_ref(q, ju, k))
+    jax.block_until_ready(f_ref_b(qb))
+    t_ref_b, _ = _time(lambda: jax.block_until_ready(f_ref_b(qb)))
+    out["jnp_batch64_ms"] = round(t_ref_b * 1e3, 3)
+    out["jnp_batch64_per_query_ms"] = round(t_ref_b / 64 * 1e3, 4)
+
+    # --- Pallas kernel in interpret mode (correctness proxy; compiled
+    # path is TPU-only) ---------------------------------------------------#
+    if not fast:
+        from repro.kernels.topk_similarity import topk_cosine_pallas
+        t_pl, _ = _time(lambda: jax.block_until_ready(
+            topk_cosine_pallas(qb[:4], ju, k, interpret=True)), repeat=1)
+        out["pallas_interpret_batch4_ms"] = round(t_pl * 1e3, 1)
+
+    # --- similarity endpoint --------------------------------------------#
+    t_sim, _ = _time(lambda: float(unit[3] @ unit[7]), repeat=10)
+    out["similarity_ms"] = round(t_sim * 1e3, 5)
+
+    # --- download payload ------------------------------------------------#
+    ids = [f"GO:{i:07d}" for i in range(n)]
+    t_dl, _ = _time(lambda: json.dumps(
+        {i: [round(float(x), 6) for x in v]
+         for i, v in zip(ids, emb[:1000])}), repeat=1)
+    out["download_1000_classes_ms"] = round(t_dl * 1e3, 1)
+
+    print(f"  B2 serving n={n}: numpy1={out['numpy_single_ms']}ms "
+          f"jnp1={out['jnp_single_ms']}ms "
+          f"jnp64={out['jnp_batch64_per_query_ms']}ms/q")
+    return out
+
+
+# ===================================================================== #
+def bench_update_pipeline(fast: bool, tmpdir: Path) -> dict:
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import ServingEngine
+    from repro.core.updater import Updater
+    from repro.kge.train import TrainConfig
+    from repro.ontology.synthetic import GO_SPEC, release_series
+
+    n_terms = 200 if fast else 800
+    versions = 3 if fast else 6           # paper hosts six versions
+    series = release_series(GO_SPEC, versions, seed=0, n_terms=n_terms)
+    registry = EmbeddingRegistry(tmpdir / "bench_registry")
+    engine = ServingEngine(registry)
+    upd = Updater(registry, engine=engine, models=("transe", "distmult"),
+                  dim=64, train_cfg=TrainConfig(batch_size=256, num_negs=8),
+                  steps_override=40 if fast else 120)
+
+    out = {"versions": []}
+    for tag, kg in series:
+        class _Ch:
+            name = "go"
+
+            def latest(self, tag=tag, kg=kg):
+                return tag, kg
+        rep = upd.run_once(_Ch())
+        out["versions"].append({"version": tag, "changed": rep.changed,
+                                "wall_s": round(rep.wall_s, 2),
+                                "n_entities": kg.num_entities})
+        print(f"  B3 release {tag}: retrain+publish {rep.wall_s:.2f}s "
+              f"({kg.num_entities} classes)")
+    latest = registry.store.latest_version("go")
+    assert latest == series[-1][0]
+    out["served_latest"] = latest
+    return out
+
+
+# ===================================================================== #
+def bench_walks(fast: bool) -> dict:
+    import jax
+    from repro.data import corpus
+    from repro.ontology.synthetic import GO_SPEC, generate
+
+    n = 1000 if fast else 5000
+    kg = generate(GO_SPEC, seed=1, n_terms=n)
+
+    def run():
+        walks, vocab, pad = corpus(kg, jax.random.key(0),
+                                   walks_per_entity=8, walk_length=4)
+        jax.block_until_ready(walks)
+        return walks
+    t, _ = _time(run, repeat=1)
+    n_walks = n * 8
+    print(f"  B4 walks: {n_walks:,} walks of len 4 in {t:.2f}s "
+          f"({n_walks/t:,.0f} walks/s)")
+    return {"n_walks": n_walks, "wall_s": round(t, 3),
+            "walks_per_s": round(n_walks / t)}
+
+
+# ===================================================================== #
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized inputs (default full CPU-sized)")
+    ap.add_argument("--only", default=None,
+                    choices=["kge", "serving", "update", "walks"])
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    t0 = time.perf_counter()
+    report = {}
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        if args.only in (None, "kge"):
+            print("[B1] KGE training throughput (six models, dim=200)")
+            report["kge_training"] = bench_kge_training(args.fast)
+        if args.only in (None, "serving"):
+            print("[B2] serving endpoints")
+            report["serving"] = bench_serving(args.fast)
+        if args.only in (None, "update"):
+            print("[B3] update pipeline (release series)")
+            report["update_pipeline"] = bench_update_pipeline(
+                args.fast, Path(td))
+        if args.only in (None, "walks"):
+            print("[B4] RDF2Vec walk corpus")
+            report["walks"] = bench_walks(args.fast)
+
+    report["total_wall_s"] = round(time.perf_counter() - t0, 1)
+    out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")
+    out.write_text(json.dumps(report, indent=2))
+    print(f"[bench] wrote {out} ({report['total_wall_s']}s total)")
+
+
+if __name__ == "__main__":
+    main()

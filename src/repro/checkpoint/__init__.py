@@ -1,0 +1,3 @@
+from .store import SnapshotStore
+
+__all__ = ["SnapshotStore"]

@@ -1,0 +1,67 @@
+"""Versioned on-disk snapshot store: npz tensors + json metadata.
+
+Layout (mirrors the paper's Zenodo deposit structure):
+  <root>/<ontology>/<version>/<model>/embeddings.npz
+  <root>/<ontology>/<version>/<model>/metadata.json   (PROV sidecar)
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class SnapshotStore:
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------------ #
+    def _dir(self, ontology: str, version: str, model: str) -> Path:
+        return self.root / ontology / version / model
+
+    def save(
+        self,
+        ontology: str,
+        version: str,
+        model: str,
+        arrays: Dict[str, np.ndarray],
+        metadata: Dict[str, Any],
+    ) -> Path:
+        d = self._dir(ontology, version, model)
+        d.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(d / "embeddings.npz", **arrays)
+        (d / "metadata.json").write_text(json.dumps(metadata, indent=2, sort_keys=True))
+        return d
+
+    def load(self, ontology: str, version: str, model: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        d = self._dir(ontology, version, model)
+        with np.load(d / "embeddings.npz", allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        metadata = json.loads((d / "metadata.json").read_text())
+        return arrays, metadata
+
+    def exists(self, ontology: str, version: str, model: str) -> bool:
+        return (self._dir(ontology, version, model) / "embeddings.npz").exists()
+
+    # ------------------------------------------------------------------ #
+    def versions(self, ontology: str) -> List[str]:
+        d = self.root / ontology
+        if not d.exists():
+            return []
+        return sorted(p.name for p in d.iterdir() if p.is_dir())
+
+    def models(self, ontology: str, version: str) -> List[str]:
+        d = self.root / ontology / version
+        if not d.exists():
+            return []
+        return sorted(p.name for p in d.iterdir() if (p / "embeddings.npz").exists())
+
+    def latest_version(self, ontology: str) -> Optional[str]:
+        vs = self.versions(ontology)
+        return vs[-1] if vs else None
+
+    def ontologies(self) -> List[str]:
+        return sorted(p.name for p in self.root.iterdir() if p.is_dir())

@@ -1,0 +1,3 @@
+from .shapes import SHAPES, InputShape, applicable
+
+__all__ = ["SHAPES", "InputShape", "applicable"]

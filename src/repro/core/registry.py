@@ -1,0 +1,106 @@
+"""Versioned embedding registry — the publication side of Bio-KGvec2go.
+
+Wraps the SnapshotStore with the paper's semantics:
+  * embeddings are keyed (ontology, version, model);
+  * each snapshot carries the entity-id list, labels, PROV metadata and the
+    source ontology checksum;
+  * ``latest`` resolves to the most recent version (the similarity / top-k
+    endpoints always serve the latest, per the paper);
+  * ``to_json`` reproduces the *download* endpoint payload: one JSON object
+    mapping each class to its 200-dim float array.
+"""
+from __future__ import annotations
+
+import datetime as _dt
+import json
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..checkpoint import SnapshotStore
+from .provenance import prov_record, validate_prov
+
+
+class EmbeddingRegistry:
+    def __init__(self, root: str | Path):
+        self.store = SnapshotStore(root)
+
+    # ---------------------------- publish ------------------------------ #
+    def publish(
+        self,
+        ontology: str,
+        version: str,
+        model_name: str,
+        entity_ids: Sequence[str],
+        labels: Sequence[str],
+        embeddings: np.ndarray,
+        ontology_checksum: str,
+        hyperparameters: Dict[str, Any],
+        train_stats: Optional[Dict[str, Any]] = None,
+        generated_at: Optional[str] = None,
+    ) -> None:
+        assert embeddings.ndim == 2 and embeddings.shape[0] == len(entity_ids)
+        generated_at = generated_at or _dt.datetime.now(_dt.timezone.utc).isoformat()
+        prov = prov_record(
+            ontology, version, ontology_checksum, model_name,
+            hyperparameters, generated_at, train_stats,
+        )
+        meta = {
+            "ontology": ontology,
+            "version": version,
+            "model": model_name,
+            "dim": int(embeddings.shape[1]),
+            "num_entities": int(embeddings.shape[0]),
+            "ontology_checksum": ontology_checksum,
+            "generated_at": generated_at,
+            "prov": prov,
+        }
+        arrays = {
+            "embeddings": np.asarray(embeddings, dtype=np.float32),
+            "entity_ids": np.asarray(entity_ids, dtype=np.str_),
+            "labels": np.asarray(labels, dtype=np.str_),
+        }
+        self.store.save(ontology, version, model_name, arrays, meta)
+
+    # ----------------------------- read -------------------------------- #
+    def get(
+        self, ontology: str, model_name: str, version: Optional[str] = None
+    ) -> Tuple[List[str], List[str], np.ndarray, Dict[str, Any]]:
+        """Returns (entity_ids, labels, embeddings, metadata)."""
+        version = version or self.store.latest_version(ontology)
+        if version is None:
+            raise KeyError(f"no published versions for ontology {ontology!r}")
+        arrays, meta = self.store.load(ontology, version, model_name)
+        if not validate_prov(meta.get("prov", {})):
+            raise ValueError(f"corrupt PROV metadata for {ontology}/{version}/{model_name}")
+        return (
+            [str(x) for x in arrays["entity_ids"]],
+            [str(x) for x in arrays["labels"]],
+            arrays["embeddings"],
+            meta,
+        )
+
+    def versions(self, ontology: str) -> List[str]:
+        return self.store.versions(ontology)
+
+    def models(self, ontology: str, version: Optional[str] = None) -> List[str]:
+        version = version or self.store.latest_version(ontology)
+        return [] if version is None else self.store.models(ontology, version)
+
+    def published_checksum(self, ontology: str) -> Optional[str]:
+        """Checksum of the ontology release behind the latest snapshots."""
+        v = self.store.latest_version(ontology)
+        if v is None:
+            return None
+        models = self.store.models(ontology, v)
+        if not models:
+            return None
+        _, meta = self.store.load(ontology, v, models[0])
+        return meta.get("ontology_checksum")
+
+    # --------------------------- download ------------------------------ #
+    def to_json(self, ontology: str, model_name: str, version: Optional[str] = None) -> str:
+        """The paper's *download* payload: {class_id: [floats...]}."""
+        ids, _, emb, _ = self.get(ontology, model_name, version)
+        return json.dumps({i: [round(float(x), 6) for x in v] for i, v in zip(ids, emb)})

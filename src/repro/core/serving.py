@@ -1,0 +1,256 @@
+"""The Bio-KGvec2go serving engine.
+
+Implements the paper's three API functionalities, in-process (the container
+has no network; the Flask layer in the paper is a thin shim over exactly
+these calls):
+
+  * ``download``      — JSON payload of all class vectors for a version;
+  * ``similarity``    — cosine similarity between two classes (ids or labels,
+                        with case/whitespace normalization), from the most
+                        up-to-date version;
+  * ``closest_concepts`` — top-k most similar classes, ranked table with
+                        identifier, label, score and exploration URL.
+
+Queries accept either class identifiers or textual labels. Top-k runs
+through the fused Pallas kernel (``repro.kernels.ops.topk_cosine``).
+A small request batcher groups concurrent top-k queries per (ontology,
+model) into one kernel call — the serving hot path the paper runs
+brute-force per request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .registry import EmbeddingRegistry
+
+
+def _norm_label(s: str) -> str:
+    """The paper's 'automatic normalization of case and whitespace'."""
+    return " ".join(s.strip().lower().split())
+
+
+def _edit_distance_capped(a: str, b: str, cap: int) -> int:
+    """Levenshtein with early exit once every band entry exceeds ``cap``."""
+    if abs(len(a) - len(b)) > cap:
+        return cap + 1
+    prev = list(range(len(b) + 1))
+    for i, ca in enumerate(a, 1):
+        cur = [i]
+        best = i
+        for j, cb in enumerate(b, 1):
+            c = min(prev[j] + 1, cur[j - 1] + 1,
+                    prev[j - 1] + (ca != cb))
+            cur.append(c)
+            best = min(best, c)
+        if best > cap:
+            return cap + 1
+        prev = cur
+    return prev[-1]
+
+
+@dataclasses.dataclass
+class ClosestConcept:
+    identifier: str
+    label: str
+    score: float
+    url: str
+
+
+class EmbeddingIndex:
+    """One (ontology, version, model) embedding table, ready to query."""
+
+    def __init__(self, entity_ids: Sequence[str], labels: Sequence[str],
+                 embeddings: np.ndarray, url_prefix: str = "https://bio.kgvec2go.org/concept/"):
+        self.entity_ids = list(entity_ids)
+        self.labels = list(labels)
+        self.url_prefix = url_prefix
+        emb = np.asarray(embeddings, dtype=np.float32)
+        norms = np.linalg.norm(emb, axis=1, keepdims=True)
+        self.embeddings = emb
+        self.unit = emb / np.maximum(norms, 1e-12)
+        self._id_to_row = {i: r for r, i in enumerate(self.entity_ids)}
+        self._label_to_row: Dict[str, int] = {}
+        for r, lbl in enumerate(self.labels):
+            self._label_to_row.setdefault(_norm_label(lbl), r)
+        #: sorted normalized labels for autocomplete (paper §6 future work)
+        self._sorted_labels = sorted(self._label_to_row)
+
+    # ------------------------------------------------------------------ #
+    def autocomplete(self, prefix: str, limit: int = 10) -> List[str]:
+        """Concept labels starting with ``prefix`` (paper §6 future work)."""
+        import bisect
+        p = _norm_label(prefix)
+        lo = bisect.bisect_left(self._sorted_labels, p)
+        out = []
+        for lbl in self._sorted_labels[lo:lo + max(limit * 4, limit)]:
+            if not lbl.startswith(p):
+                break
+            out.append(self.labels[self._label_to_row[lbl]])
+            if len(out) == limit:
+                break
+        return out
+
+    def resolve_fuzzy(self, query: str, max_edits: int = 2
+                      ) -> Optional[Tuple[int, str]]:
+        """Typo-tolerant label match (paper §6 future work): the closest
+        label within ``max_edits`` Levenshtein edits. Returns (row, label)
+        or None. Exact matches short-circuit via resolve()."""
+        q = _norm_label(query)
+        best: Optional[Tuple[int, str]] = None
+        best_d = max_edits + 1
+        for lbl, row in self._label_to_row.items():
+            # cheap pre-filters before the DP
+            if abs(len(lbl) - len(q)) > max_edits:
+                continue
+            d = _edit_distance_capped(q, lbl, min(best_d - 1, max_edits))
+            if d < best_d:
+                best, best_d = (row, self.labels[row]), d
+                if d == 1:
+                    break
+        return best
+
+    # ------------------------------------------------------------------ #
+    def resolve(self, query: str, fuzzy: bool = False) -> Optional[int]:
+        if query in self._id_to_row:
+            return self._id_to_row[query]
+        row = self._label_to_row.get(_norm_label(query))
+        if row is None and fuzzy:
+            hit = self.resolve_fuzzy(query)
+            return hit[0] if hit else None
+        return row
+
+    def vector(self, query: str) -> np.ndarray:
+        row = self.resolve(query)
+        if row is None:
+            raise KeyError(f"unknown class {query!r}")
+        return self.embeddings[row]
+
+    def similarity(self, a: str, b: str) -> float:
+        ra, rb = self.resolve(a), self.resolve(b)
+        if ra is None or rb is None:
+            missing = a if ra is None else b
+            raise KeyError(f"unknown class {missing!r}")
+        return float(np.dot(self.unit[ra], self.unit[rb]))
+
+    def top_k(self, queries: Sequence[str], k: int = 10,
+              exclude_self: bool = True) -> List[List[ClosestConcept]]:
+        """Batched top-k closest concepts (the paper returns top 10)."""
+        rows = []
+        for q in queries:
+            r = self.resolve(q)
+            if r is None:
+                raise KeyError(f"unknown class {q!r}")
+            rows.append(r)
+        qvec = self.unit[np.asarray(rows)]                      # (Q, d)
+        kk = k + 1 if exclude_self else k
+        from ..kernels import ops as kops
+        scores, idx = kops.topk_cosine(jnp.asarray(qvec), jnp.asarray(self.unit), kk)
+        scores, idx = np.asarray(scores), np.asarray(idx)
+        out: List[List[ClosestConcept]] = []
+        for qi, row in enumerate(rows):
+            lst: List[ClosestConcept] = []
+            for score, j in zip(scores[qi], idx[qi]):
+                if exclude_self and int(j) == row:
+                    continue
+                ident = self.entity_ids[int(j)]
+                lst.append(ClosestConcept(ident, self.labels[int(j)], float(score),
+                                          self.url_prefix + ident))
+                if len(lst) == k:
+                    break
+            out.append(lst)
+        return out
+
+
+class ServingEngine:
+    """Serves the latest published snapshots from an EmbeddingRegistry."""
+
+    def __init__(self, registry: EmbeddingRegistry):
+        self.registry = registry
+        self._cache: Dict[Tuple[str, str, str], EmbeddingIndex] = {}
+
+    def _index(self, ontology: str, model: str, version: Optional[str] = None) -> EmbeddingIndex:
+        version = version or self.registry.store.latest_version(ontology)
+        if version is None:
+            raise KeyError(f"no published versions for {ontology!r}")
+        key = (ontology, version, model)
+        if key not in self._cache:
+            ids, labels, emb, _ = self.registry.get(ontology, model, version)
+            self._cache[key] = EmbeddingIndex(ids, labels, emb)
+        return self._cache[key]
+
+    def invalidate(self, ontology: str) -> None:
+        """Called by the updater after publishing a new version."""
+        self._cache = {k: v for k, v in self._cache.items() if k[0] != ontology}
+
+    # ------------------------- the three endpoints --------------------- #
+    def download(self, ontology: str, model: str, version: Optional[str] = None) -> str:
+        return self.registry.to_json(ontology, model, version)
+
+    def similarity(self, ontology: str, model: str, a: str, b: str,
+                   fuzzy: bool = False) -> float:
+        idx = self._index(ontology, model)
+        if fuzzy:
+            ra, rb = idx.resolve(a, fuzzy=True), idx.resolve(b, fuzzy=True)
+            if ra is None or rb is None:
+                raise KeyError(f"unknown class {a if ra is None else b!r}")
+            import numpy as _np
+            return float(_np.dot(idx.unit[ra], idx.unit[rb]))
+        return idx.similarity(a, b)
+
+    def closest_concepts(self, ontology: str, model: str, query: str,
+                         k: int = 10, fuzzy: bool = False) -> List[ClosestConcept]:
+        idx = self._index(ontology, model)
+        if fuzzy:
+            row = idx.resolve(query, fuzzy=True)
+            if row is None:
+                raise KeyError(f"unknown class {query!r}")
+            query = idx.entity_ids[row]
+        return idx.top_k([query], k)[0]
+
+    # ---------------- paper §6 future work, implemented ---------------- #
+    def autocomplete(self, ontology: str, model: str, prefix: str,
+                     limit: int = 10) -> List[str]:
+        """Concept-label autocomplete."""
+        return self._index(ontology, model).autocomplete(prefix, limit)
+
+
+@dataclasses.dataclass
+class TopKRequest:
+    ontology: str
+    model: str
+    query: str
+    k: int = 10
+
+
+class RequestBatcher:
+    """Groups concurrent top-k requests per (ontology, model) and executes
+    each group as ONE batched kernel call — amortizing the (N, d) scan."""
+
+    def __init__(self, engine: ServingEngine, max_batch: int = 64):
+        self.engine = engine
+        self.max_batch = max_batch
+        self._pending: List[Tuple[int, TopKRequest]] = []
+
+    def submit(self, req: TopKRequest) -> int:
+        ticket = len(self._pending)
+        self._pending.append((ticket, req))
+        return ticket
+
+    def flush(self) -> Dict[int, List[ClosestConcept]]:
+        groups: Dict[Tuple[str, str, int], List[Tuple[int, TopKRequest]]] = {}
+        for ticket, req in self._pending:
+            groups.setdefault((req.ontology, req.model, req.k), []).append((ticket, req))
+        results: Dict[int, List[ClosestConcept]] = {}
+        for (ont, model, k), items in groups.items():
+            index = self.engine._index(ont, model)
+            for start in range(0, len(items), self.max_batch):
+                chunk = items[start : start + self.max_batch]
+                batch_res = index.top_k([r.query for _, r in chunk], k)
+                for (ticket, _), res in zip(chunk, batch_res):
+                    results[ticket] = res
+        self._pending.clear()
+        return results

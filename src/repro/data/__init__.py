@@ -1,0 +1,4 @@
+from .triples import TripleLoader
+from .walks import corpus, relation_token, skipgram_pairs
+
+__all__ = ["TripleLoader", "corpus", "relation_token", "skipgram_pairs"]

@@ -1,0 +1,40 @@
+"""Triple batching pipeline: epoch shuffling, drop-remainder padding-free
+batches, host-side numpy (cheap) feeding jit'd steps."""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+class TripleLoader:
+    """Infinite shuffled triple batches. Deterministic given seed."""
+
+    def __init__(self, triples: np.ndarray, batch_size: int, seed: int = 0,
+                 drop_remainder: bool = True):
+        assert triples.ndim == 2 and triples.shape[1] == 3
+        self.triples = np.asarray(triples, dtype=np.int32)
+        self.batch_size = int(batch_size)
+        self.rng = np.random.default_rng(seed)
+        self.drop_remainder = drop_remainder
+
+    @property
+    def steps_per_epoch(self) -> int:
+        m = self.triples.shape[0]
+        return m // self.batch_size if self.drop_remainder else -(-m // self.batch_size)
+
+    def epoch(self) -> Iterator[np.ndarray]:
+        perm = self.rng.permutation(self.triples.shape[0])
+        shuf = self.triples[perm]
+        m = shuf.shape[0]
+        end = m - m % self.batch_size if self.drop_remainder else m
+        for start in range(0, end, self.batch_size):
+            batch = shuf[start : start + self.batch_size]
+            if batch.shape[0] < self.batch_size:
+                pad = self.batch_size - batch.shape[0]
+                batch = np.concatenate([batch, shuf[:pad]], axis=0)
+            yield batch
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        while True:
+            yield from self.epoch()

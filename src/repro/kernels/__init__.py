@@ -1,0 +1,8 @@
+# Compute hot-spots: serving top-k scan, KGE scoring, sliding-window attn.
+from . import ops, ref
+from .kge_score import kge_score_pallas
+from .swa_attention import swa_attention_pallas
+from .topk_similarity import topk_cosine_pallas
+
+__all__ = ["ops", "ref", "kge_score_pallas", "swa_attention_pallas",
+           "topk_cosine_pallas"]

@@ -1,0 +1,65 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` dispatch: on this CPU container the kernels execute in
+interpret mode (numerically identical, slow); the pure-jnp reference path is
+the default for jitted production lowering on CPU and the shape source of
+truth. On a real TPU, flip REPRO_USE_PALLAS=1 (or pass use_pallas=True) and
+the same call sites run the compiled kernels with interpret=False.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kge_score import kge_score_pallas
+from .swa_attention import swa_attention_pallas
+from .topk_similarity import topk_cosine_pallas
+
+_ENV_FLAG = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+# on CPU, pallas runs in interpret mode; on TPU, compiled
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _use_pallas(flag: Optional[bool]) -> bool:
+    return _ENV_FLAG if flag is None else flag
+
+
+def topk_cosine(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
+                use_pallas: Optional[bool] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(Q, d) x (N, d) -> top-k (scores, indices), descending."""
+    if _use_pallas(flag=use_pallas):
+        block_n = min(1024, max(128, e_unit.shape[0]))
+        return topk_cosine_pallas(q_unit, e_unit, k, block_n=block_n,
+                                  interpret=_INTERPRET)
+    return ref.topk_cosine_ref(q_unit, e_unit, k)
+
+
+def kge_score(h, r, t, neg, corrupt_head, model: str = "transe_l1",
+              use_pallas: Optional[bool] = None):
+    """Fused positive+negative KGE scoring. Returns (pos (B,), neg (B, K))."""
+    if _use_pallas(flag=use_pallas):
+        return kge_score_pallas(h, r, t, neg, corrupt_head, model=model,
+                                interpret=_INTERPRET)
+    return ref.kge_score_ref(h, r, t, neg, corrupt_head, model=model)
+
+
+def swa_attention(q, k, v, window: int, q_offset: int = 0,
+                  use_pallas: Optional[bool] = None):
+    """Sliding-window GQA attention.
+
+    Accepts (B, H, S, d) tensors (ref layout); the pallas path folds heads.
+    """
+    if _use_pallas(flag=use_pallas):
+        b, hq, sq, d = q.shape
+        _, hkv, skv, _ = k.shape
+        qf = q.reshape(b * hq, sq, d)
+        kf = k.reshape(b * hkv, skv, d)
+        vf = v.reshape(b * hkv, skv, d)
+        out = swa_attention_pallas(qf, kf, vf, window=window, q_offset=q_offset,
+                                   interpret=_INTERPRET)
+        return out.reshape(b, hq, sq, d)
+    return ref.swa_attention_ref(q, k, v, window=window, q_offset=q_offset)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; kernels must match them (tests assert_allclose,
+sweeping shapes and dtypes).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------- topk_similarity --------------------------- #
+def topk_cosine_ref(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q_unit (Q, d), e_unit (N, d), both row-normalized.
+
+    Returns (scores (Q, k), indices (Q, k)) sorted descending.
+    """
+    scores = q_unit @ e_unit.T
+    return jax.lax.top_k(scores, k)
+
+
+# ------------------------------ kge_score ------------------------------ #
+def kge_score_ref(
+    h: jnp.ndarray,            # (B, d) head embeddings
+    r: jnp.ndarray,            # (B, d) relation embeddings
+    t: jnp.ndarray,            # (B, d) tail embeddings
+    neg: jnp.ndarray,          # (B, K, d) corrupting entity embeddings
+    corrupt_head: jnp.ndarray, # (B, K) bool — True: neg replaces head
+    model: str = "transe_l1",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused positive + negative scoring. Returns (pos (B,), neg (B, K))."""
+    if model == "transe_l1":
+        pos = -jnp.sum(jnp.abs(h + r - t), axis=-1)
+        diff_h = neg + r[:, None, :] - t[:, None, :]    # neg as head
+        diff_t = h[:, None, :] + r[:, None, :] - neg    # neg as tail
+        diff = jnp.where(corrupt_head[..., None], diff_h, diff_t)
+        negs = -jnp.sum(jnp.abs(diff), axis=-1)
+    elif model == "transe_l2":
+        pos = -jnp.sqrt(jnp.sum((h + r - t) ** 2, axis=-1) + 1e-12)
+        diff_h = neg + r[:, None, :] - t[:, None, :]
+        diff_t = h[:, None, :] + r[:, None, :] - neg
+        diff = jnp.where(corrupt_head[..., None], diff_h, diff_t)
+        negs = -jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)
+    elif model == "distmult":
+        pos = jnp.sum(h * r * t, axis=-1)
+        s_h = jnp.sum(neg * (r * t)[:, None, :], axis=-1)
+        s_t = jnp.sum((h * r)[:, None, :] * neg, axis=-1)
+        negs = jnp.where(corrupt_head, s_h, s_t)
+    else:
+        raise ValueError(model)
+    return pos, negs
+
+
+# ---------------------------- swa_attention ---------------------------- #
+def swa_attention_ref(
+    q: jnp.ndarray,      # (B, Hq, Sq, d)
+    k: jnp.ndarray,      # (B, Hkv, Skv, d)
+    v: jnp.ndarray,      # (B, Hkv, Skv, d)
+    window: int,         # attend to positions in (pos - window, pos]
+    q_offset: int = 0,   # absolute position of q[..., 0, :] (decode: Skv-Sq)
+) -> jnp.ndarray:
+    """Causal sliding-window GQA attention, fp32 softmax. (B, Hq, Sq, d)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    causal = k_pos <= q_pos
+    in_window = k_pos > q_pos - window
+    mask = causal & in_window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

@@ -1,0 +1,119 @@
+"""Sliding-window flash attention (Pallas, TPU) — prefill and decode.
+
+Used by h2o-danube (SWA 4096), recurrentgemma's local-attention layers
+(window 2048), and as the beyond-paper windowed-decode override for dense
+archs at 500k context.
+
+Shape convention: heads are folded into the leading dim.
+  q (B·Hq, Sq, d), k/v (B·Hkv, Skv, d); GQA group g = Hq/Hkv is resolved in
+  the kv BlockSpec index_map (kv row = q row // g) — no materialized repeat.
+
+Grid: (B·Hq, Sq/bq, Skv/bk), kv innermost; online-softmax state
+(running max m, normalizer l, accumulator acc) lives in VMEM scratch and is
+rescaled per kv block — the (Sq, Skv) logit matrix never exists in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                *, bq: int, bk: int, d: int, window: int, q_offset: int,
+                scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    n_kv = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+
+    q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (k_pos <= q_pos) & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...][:, 0]                           # (bq,)
+    l_prev = l_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(kj == n_kv - 1)
+    def _finalize():
+        l = l_ref[...][:, 0]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "q_offset", "bq", "bk", "interpret")
+)
+def swa_attention_pallas(
+    q: jnp.ndarray,      # (BHq, Sq, d)
+    k: jnp.ndarray,      # (BHkv, Skv, d)
+    v: jnp.ndarray,      # (BHkv, Skv, d)
+    window: int,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    bhq, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    assert bhq % bhkv == 0
+    g = bhq // bhkv
+    scale = d ** -0.5
+
+    pad_q = -sq % bq
+    pad_k = -skv % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    sq_t, skv_t = sq + pad_q, skv + pad_k
+
+    grid = (bhq, sq_t // bq, skv_t // bk)
+    out = pl.pallas_call(
+        functools.partial(
+            _swa_kernel, bq=bq, bk=bk, d=d, window=window,
+            q_offset=q_offset, scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, j, l: (i, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j, l, g=g: (i // g, l, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j, l, g=g: (i // g, l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, j, l: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhq, sq_t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

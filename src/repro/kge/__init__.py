@@ -1,0 +1,13 @@
+from .base import KGEModel, KGESpec, PAPER_DIM, PAPER_EPOCHS, available_models, make_model
+from . import transe, transr, distmult, hole, boxe, rdf2vec  # noqa: F401 (registry)
+from .eval import rank_based_eval
+from .losses import LOSSES, get_loss
+from .negatives import corrupt
+from .train import KGETrainer, TrainConfig, make_train_step
+
+__all__ = [
+    "KGEModel", "KGESpec", "PAPER_DIM", "PAPER_EPOCHS",
+    "available_models", "make_model", "rank_based_eval",
+    "LOSSES", "get_loss", "corrupt",
+    "KGETrainer", "TrainConfig", "make_train_step",
+]

@@ -1,0 +1,135 @@
+"""KGE model interface.
+
+Every model maps integer (h, r, t) ids to a real-valued plausibility score —
+**higher is more plausible** (distance models return negative distance).
+Params are plain pytrees of jnp arrays so they shard with pjit unchanged.
+
+The paper trains all models with PyKEEN defaults except dim=200 and
+epochs=100; those two are the framework defaults here too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+#: paper's fixed hyperparameters
+PAPER_DIM = 200
+PAPER_EPOCHS = 100
+
+
+@dataclasses.dataclass(frozen=True)
+class KGESpec:
+    """Static model hyperparameters."""
+
+    name: str
+    n_entities: int
+    n_relations: int
+    dim: int = PAPER_DIM
+    loss: str = "margin"      # margin | nssa | softplus | bce
+    margin: float = 1.0
+    p_norm: int = 1           # for translational models
+    dtype: Any = jnp.float32
+
+
+class KGEModel:
+    """Base class. Subclasses override init / score (+ optionally the
+    score_all_* fast paths and the post-step constraint)."""
+
+    def __init__(self, spec: KGESpec):
+        self.spec = spec
+
+    # ------------------------------------------------------------------ #
+    def init(self, key: jax.Array) -> Params:
+        raise NotImplementedError
+
+    def score(self, params: Params, h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+        """Elementwise score over broadcastable id arrays."""
+        raise NotImplementedError
+
+    # --- 1-vs-all fast paths (used by ranking eval & serving) ---------- #
+    def score_all_tails(self, params: Params, h: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+        """(B,) ids -> (B, N) scores against every entity as tail."""
+        n = self.spec.n_entities
+        return self.score(params, h[:, None], r[:, None], jnp.arange(n)[None, :])
+
+    def score_all_heads(self, params: Params, r: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+        n = self.spec.n_entities
+        return self.score(params, jnp.arange(n)[None, :], r[:, None], t[:, None])
+
+    # ------------------------------------------------------------------ #
+    def constrain(self, params: Params) -> Params:
+        """Post-step constraint (e.g. TransE unit-norm entities). Default: id."""
+        return params
+
+    def regularizer(self, params: Params, h: jnp.ndarray, r: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+        return jnp.asarray(0.0, self.spec.dtype)
+
+    def entity_embeddings(self, params: Params) -> jnp.ndarray:
+        """(N, dim) table that the serving layer snapshots and serves."""
+        return params["entity"]
+
+    # ------------------------------------------------------------------ #
+    def param_shardings(self, mesh_axis: str = "model",
+                        axis_size: Optional[int] = None) -> Params:
+        """PartitionSpec pytree matching init(); entity/relation tables are
+        vocab(row)-sharded over the model axis. Tables whose row count does
+        not divide ``axis_size`` (e.g. the 3-row GO relation table on a
+        16-way axis) are replicated."""
+        from jax.sharding import PartitionSpec as P
+
+        shapes = jax.eval_shape(self.init, jax.random.key(0))
+
+        def spec_for(shape) -> P:
+            if axis_size and shape[0] % axis_size != 0:
+                return P(*([None] * len(shape)))
+            return P(mesh_axis, *([None] * (len(shape) - 1)))
+
+        return {k: spec_for(v.shape) for k, v in shapes.items()}
+
+
+# ---------------------------------------------------------------------- #
+_REGISTRY: Dict[str, Callable[[KGESpec], KGEModel]] = {}
+
+
+def register(name: str) -> Callable:
+    def deco(cls):
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def make_model(name: str, n_entities: int, n_relations: int, dim: int = PAPER_DIM,
+               **kw) -> KGEModel:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown KGE model {name!r}; have {sorted(_REGISTRY)}")
+    defaults = _MODEL_DEFAULTS.get(name, {})
+    merged = {**defaults, **kw}
+    spec = KGESpec(name=name, n_entities=n_entities, n_relations=n_relations,
+                   dim=dim, **merged)
+    return _REGISTRY[name](spec)
+
+
+def available_models() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+#: per-model default losses (mirrors PyKEEN's per-model defaults)
+_MODEL_DEFAULTS: Dict[str, Dict[str, Any]] = {
+    "transe": dict(loss="margin", p_norm=1),
+    "transr": dict(loss="margin", p_norm=2),
+    "distmult": dict(loss="margin"),
+    "hole": dict(loss="margin"),
+    "boxe": dict(loss="nssa"),
+    "rdf2vec": dict(loss="bce"),
+}
+
+
+def _uniform_init(key: jax.Array, shape: Tuple[int, ...], dim: int, dtype) -> jnp.ndarray:
+    """PyKEEN/TransE-style xavier-uniform: U(-6/sqrt(d), 6/sqrt(d))."""
+    bound = 6.0 / jnp.sqrt(jnp.asarray(dim, jnp.float32))
+    return jax.random.uniform(key, shape, dtype, -bound, bound)

@@ -1,0 +1,60 @@
+"""BoxE (Abboud et al., 2020), arity-2 specialization.
+
+Entities: base point e + translational bump b. Relations: two boxes (one per
+argument position), parameterized by center c and (positive) width w.
+A point for position 1 is  p1 = e_h + b_t ; for position 2  p2 = e_t + b_h.
+The distance function is the piecewise one from the paper (eq. 2-3):
+inside the box, distance is scaled *down* by the width; outside, scaled up —
+giving gradients that pull points into boxes.
+
+score = -(dist(p1, box_r_1) + dist(p2, box_r_2))  (negative L2 of the
+per-dimension distances, as in the paper with p=2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import KGEModel, Params, _uniform_init, register
+
+
+def _box_dist(p: jnp.ndarray, center: jnp.ndarray, width: jnp.ndarray) -> jnp.ndarray:
+    """Per-dimension BoxE distance, then L2 over dim.
+
+    width is the half-width κ/2 >= 0 (softplus-parameterized by the caller).
+    """
+    w = width + 0.5  # paper's width+1 smoothing (here half-width + 0.5)
+    low = center - width
+    high = center + width
+    inside = (p >= low) & (p <= high)
+    d_in = jnp.abs(p - center) / w
+    d_out = jnp.abs(p - center) * w - width * (w - 1.0 / w)
+    per_dim = jnp.where(inside, d_in, d_out)
+    return jnp.linalg.norm(per_dim, axis=-1)
+
+
+@register("boxe")
+class BoxE(KGEModel):
+    def init(self, key: jax.Array) -> Params:
+        s = self.spec
+        ks = jax.random.split(key, 5)
+        return {
+            "entity": _uniform_init(ks[0], (s.n_entities, s.dim), s.dim, s.dtype),
+            "bump": _uniform_init(ks[1], (s.n_entities, s.dim), s.dim, s.dtype),
+            # two boxes per relation: centers + raw widths (softplus'd)
+            "center": _uniform_init(ks[2], (s.n_relations, 2, s.dim), s.dim, s.dtype),
+            "width_raw": 0.1 * jax.random.normal(ks[3], (s.n_relations, 2, s.dim), s.dtype),
+        }
+
+    def score(self, params: Params, h, r, t) -> jnp.ndarray:
+        eh, bh = params["entity"][h], params["bump"][h]
+        et, bt = params["entity"][t], params["bump"][t]
+        c = params["center"][r]                       # (..., 2, d)
+        w = jax.nn.softplus(params["width_raw"][r])   # (..., 2, d) > 0
+        eh, bt = jnp.broadcast_arrays(eh, bt)
+        et, bh = jnp.broadcast_arrays(et, bh)
+        p1 = eh + bt
+        p2 = et + bh
+        d1 = _box_dist(p1, c[..., 0, :], w[..., 0, :])
+        d2 = _box_dist(p2, c[..., 1, :], w[..., 1, :])
+        return -(d1 + d2)

@@ -1,0 +1,38 @@
+"""DistMult (Yang et al., 2015): bilinear diagonal score = <h, r, t>."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import KGEModel, Params, _uniform_init, register
+
+
+@register("distmult")
+class DistMult(KGEModel):
+    def init(self, key: jax.Array) -> Params:
+        s = self.spec
+        ke, kr = jax.random.split(key)
+        ent = _uniform_init(ke, (s.n_entities, s.dim), s.dim, s.dtype)
+        rel = _uniform_init(kr, (s.n_relations, s.dim), s.dim, s.dtype)
+        return {"entity": ent, "relation": rel}
+
+    def score(self, params: Params, h, r, t) -> jnp.ndarray:
+        he = params["entity"][h]
+        re = params["relation"][r]
+        te = params["entity"][t]
+        return jnp.sum(he * re * te, axis=-1)
+
+    def score_all_tails(self, params: Params, h, r) -> jnp.ndarray:
+        q = params["entity"][h] * params["relation"][r]         # (B, d)
+        return q @ params["entity"].T                           # (B, N)
+
+    def score_all_heads(self, params: Params, r, t) -> jnp.ndarray:
+        q = params["entity"][t] * params["relation"][r]
+        return q @ params["entity"].T
+
+    def regularizer(self, params: Params, h, r, t) -> jnp.ndarray:
+        # L2 on the touched rows only (sparse-friendly, like PyKEEN's LP reg)
+        he = params["entity"][h]
+        re = params["relation"][r]
+        te = params["entity"][t]
+        return jnp.mean(he**2) + jnp.mean(re**2) + jnp.mean(te**2)

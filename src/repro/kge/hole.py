@@ -1,0 +1,70 @@
+"""HolE (Nickel et al., 2016): score = r . corr(h, t).
+
+corr(h, t)[k] = sum_i h[i] * t[(i + k) mod d]  — circular correlation,
+computed via rFFT: corr(h, t) = irfft(conj(rfft(h)) * rfft(t)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import KGEModel, Params, _uniform_init, register
+
+
+def circular_correlation(h: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    d = h.shape[-1]
+    fh = jnp.fft.rfft(h, n=d, axis=-1)
+    ft = jnp.fft.rfft(t, n=d, axis=-1)
+    return jnp.fft.irfft(jnp.conj(fh) * ft, n=d, axis=-1)
+
+
+@register("hole")
+class HolE(KGEModel):
+    def init(self, key: jax.Array) -> Params:
+        s = self.spec
+        ke, kr = jax.random.split(key)
+        ent = _uniform_init(ke, (s.n_entities, s.dim), s.dim, s.dtype)
+        rel = _uniform_init(kr, (s.n_relations, s.dim), s.dim, s.dtype)
+        return {"entity": ent, "relation": rel}
+
+    def score(self, params: Params, h, r, t) -> jnp.ndarray:
+        he = params["entity"][h]
+        re = params["relation"][r]
+        te = params["entity"][t]
+        he, te = jnp.broadcast_arrays(he, te)
+        return jnp.sum(re * circular_correlation(he, te), axis=-1)
+
+    def score_all_tails(self, params: Params, h, r) -> jnp.ndarray:
+        # <r, corr(h, t)> = <q, t> with q the circular convolution of h and r
+        # (derivation in _tail_query) — turns 1-vs-all into a single matmul.
+        he = params["entity"][h]                                 # (B, d)
+        re = params["relation"][r]                               # (B, d)
+        q = _tail_query(he, re)
+        return q @ params["entity"].T
+
+    def score_all_heads(self, params: Params, r, t) -> jnp.ndarray:
+        te = params["entity"][t]
+        re = params["relation"][r]
+        q = _head_query(te, re)
+        return q @ params["entity"].T
+
+
+def _tail_query(h: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """q with <r, corr(h, t)> = <q, t> for all t.
+
+    corr(h,t)_k = Σ_i h_i t_{(i+k) mod d}
+    ⇒ score = Σ_k r_k Σ_i h_i t_{i+k} = Σ_j t_j Σ_i h_i r_{(j-i) mod d}
+    ⇒ q = circular *convolution* of h and r = irfft(rfft(h)·rfft(r)).
+    """
+    d = h.shape[-1]
+    return jnp.fft.irfft(jnp.fft.rfft(h, n=d, axis=-1) * jnp.fft.rfft(r, n=d, axis=-1), n=d, axis=-1)
+
+
+def _head_query(t: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """q with <r, corr(h, t)> = <q, h> for all h.
+
+    score = Σ_i h_i Σ_k r_k t_{(i+k) mod d} = <h, corr(r, t)>  (correlation of
+    r with t) ⇒ q = irfft(conj(rfft(r))·rfft(t)).
+    """
+    d = t.shape[-1]
+    return jnp.fft.irfft(jnp.conj(jnp.fft.rfft(r, n=d, axis=-1)) * jnp.fft.rfft(t, n=d, axis=-1), n=d, axis=-1)

@@ -1,0 +1,46 @@
+"""Losses for KGE training.
+
+All take (pos_scores (B,), neg_scores (B, K)) with higher-is-better scores.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def margin_ranking(pos: jnp.ndarray, neg: jnp.ndarray, margin: float = 1.0) -> jnp.ndarray:
+    """PyKEEN's default MarginRankingLoss (SLCWA)."""
+    return jnp.mean(jax.nn.relu(margin + neg - pos[:, None]))
+
+
+def nssa(pos: jnp.ndarray, neg: jnp.ndarray, margin: float = 9.0,
+         adversarial_temperature: float = 1.0) -> jnp.ndarray:
+    """Self-adversarial negative sampling (RotatE paper; PyKEEN default for BoxE)."""
+    w = jax.nn.softmax(neg * adversarial_temperature, axis=-1)
+    w = jax.lax.stop_gradient(w)
+    neg_term = jnp.sum(w * jax.nn.softplus(margin + neg), axis=-1)
+    pos_term = jax.nn.softplus(-(pos + margin))
+    return jnp.mean(pos_term + neg_term)
+
+
+def softplus_loss(pos: jnp.ndarray, neg: jnp.ndarray, **_) -> jnp.ndarray:
+    return jnp.mean(jax.nn.softplus(-pos)) + jnp.mean(jax.nn.softplus(neg))
+
+
+def bce(pos: jnp.ndarray, neg: jnp.ndarray, **_) -> jnp.ndarray:
+    """Binary cross-entropy with logits (skip-gram w/ negative sampling form)."""
+    pos_l = -jax.nn.log_sigmoid(pos)
+    neg_l = -jax.nn.log_sigmoid(-neg)
+    return jnp.mean(pos_l) + jnp.mean(jnp.sum(neg_l, axis=-1))
+
+
+LOSSES = {
+    "margin": margin_ranking,
+    "nssa": nssa,
+    "softplus": softplus_loss,
+    "bce": bce,
+}
+
+
+def get_loss(name: str):
+    return LOSSES[name]

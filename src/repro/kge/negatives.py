@@ -1,0 +1,26 @@
+"""Negative sampling: uniform head/tail corruption (PyKEEN SLCWA default)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def corrupt(
+    key: jax.Array,
+    triples: jnp.ndarray,     # (B, 3) int
+    n_entities: int,
+    num_negs: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Return (h, r, t) of shape (B, K): each positive corrupted K times,
+    half on the head side, half on the tail side (per-sample random choice).
+    """
+    b = triples.shape[0]
+    k_rand, k_side = jax.random.split(key)
+    rand_ents = jax.random.randint(k_rand, (b, num_negs), 0, n_entities)
+    corrupt_head = jax.random.bernoulli(k_side, 0.5, (b, num_negs))
+    h = jnp.where(corrupt_head, rand_ents, triples[:, 0:1])
+    t = jnp.where(corrupt_head, triples[:, 2:3], rand_ents)
+    r = jnp.broadcast_to(triples[:, 1:2], (b, num_negs))
+    return h, r, t

@@ -1,0 +1,47 @@
+"""RDF2Vec (Ristoski & Paulheim, 2016) in JAX.
+
+Two stages, as in the paper: (i) random-walk corpus over the KG
+(``repro.data.walks`` — vectorized lax.scan walker), (ii) skip-gram with
+negative sampling (word2vec SGNS) over the walk token sequences.
+
+The model's vocabulary covers entities AND relation tokens; only the entity
+rows are served. Exposed through the same KGEModel interface so the trainer,
+registry and serving layer treat it uniformly — its "triples" are
+(center, 0, context) pairs produced by the walker.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import KGEModel, Params, register
+
+
+@register("rdf2vec")
+class RDF2Vec(KGEModel):
+    """SGNS: score(center, _, context) = <in_emb[center], out_emb[context]>.
+
+    spec.n_entities must be the *token* vocabulary size (entities + relation
+    tokens + pad); served embeddings are the first ``n_graph_entities`` rows
+    of the input matrix (word2vec convention).
+    """
+
+    def init(self, key: jax.Array) -> Params:
+        s = self.spec
+        ki, ko = jax.random.split(key)
+        scale = 1.0 / s.dim
+        w_in = jax.random.uniform(ki, (s.n_entities, s.dim), s.dtype, -scale, scale)
+        w_out = jnp.zeros((s.n_entities, s.dim), s.dtype)
+        return {"entity": w_in, "context": w_out}
+
+    def score(self, params: Params, h, r, t) -> jnp.ndarray:
+        ce = params["entity"][h]
+        xe = params["context"][t]
+        ce, xe = jnp.broadcast_arrays(ce, xe)
+        return jnp.sum(ce * xe, axis=-1)
+
+    def score_all_tails(self, params: Params, h, r) -> jnp.ndarray:
+        return params["entity"][h] @ params["context"].T
+
+    def score_all_heads(self, params: Params, r, t) -> jnp.ndarray:
+        return params["context"][t] @ params["entity"].T

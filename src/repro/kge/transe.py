@@ -1,0 +1,45 @@
+"""TransE (Bordes et al., 2013): score = -||h + r - t||_p."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import KGEModel, Params, _uniform_init, register
+
+
+@register("transe")
+class TransE(KGEModel):
+    def init(self, key: jax.Array) -> Params:
+        s = self.spec
+        ke, kr = jax.random.split(key)
+        ent = _uniform_init(ke, (s.n_entities, s.dim), s.dim, s.dtype)
+        rel = _uniform_init(kr, (s.n_relations, s.dim), s.dim, s.dtype)
+        rel = rel / (jnp.linalg.norm(rel, axis=-1, keepdims=True) + 1e-12)
+        return {"entity": ent, "relation": rel}
+
+    def _dist(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.spec.p_norm == 1:
+            return jnp.sum(jnp.abs(x), axis=-1)
+        return jnp.sqrt(jnp.sum(x * x, axis=-1) + 1e-12)
+
+    def score(self, params: Params, h, r, t) -> jnp.ndarray:
+        he = params["entity"][h]
+        re = params["relation"][r]
+        te = params["entity"][t]
+        return -self._dist(he + re - te)
+
+    def score_all_tails(self, params: Params, h, r) -> jnp.ndarray:
+        q = params["entity"][h] + params["relation"][r]       # (B, d)
+        diff = q[:, None, :] - params["entity"][None, :, :]   # (B, N, d)
+        return -self._dist(diff)
+
+    def score_all_heads(self, params: Params, r, t) -> jnp.ndarray:
+        # h + r - t = h - (t - r): distance between each entity and q
+        q = params["entity"][t] - params["relation"][r]       # (B, d)
+        diff = params["entity"][None, :, :] - q[:, None, :]
+        return -self._dist(diff)
+
+    def constrain(self, params: Params) -> Params:
+        ent = params["entity"]
+        norm = jnp.linalg.norm(ent, axis=-1, keepdims=True)
+        return {**params, "entity": ent / jnp.maximum(norm, 1.0)}

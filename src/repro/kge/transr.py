@@ -1,0 +1,67 @@
+"""TransR (Lin et al., 2015): project entities into a per-relation space.
+
+score = -|| h W_r + r - t W_r ||_p  with W_r a (dim, dim) relation matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import KGEModel, Params, _uniform_init, register
+
+
+@register("transr")
+class TransR(KGEModel):
+    def init(self, key: jax.Array) -> Params:
+        s = self.spec
+        ke, kr, kw = jax.random.split(key, 3)
+        ent = _uniform_init(ke, (s.n_entities, s.dim), s.dim, s.dtype)
+        rel = _uniform_init(kr, (s.n_relations, s.dim), s.dim, s.dtype)
+        # identity-ish init keeps early training close to TransE
+        eye = jnp.eye(s.dim, dtype=s.dtype)
+        noise = 0.01 * jax.random.normal(kw, (s.n_relations, s.dim, s.dim), s.dtype)
+        return {"entity": ent, "relation": rel, "proj": eye[None] + noise}
+
+    def _dist(self, x: jnp.ndarray) -> jnp.ndarray:
+        if self.spec.p_norm == 1:
+            return jnp.sum(jnp.abs(x), axis=-1)
+        return jnp.sqrt(jnp.sum(x * x, axis=-1) + 1e-12)
+
+    def _project(self, e: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """e (..., d), w (..., d, d) -> (..., d), with norm clip like PyKEEN."""
+        p = jnp.einsum("...d,...de->...e", e, w)
+        norm = jnp.linalg.norm(p, axis=-1, keepdims=True)
+        return p / jnp.maximum(norm, 1.0)
+
+    def score(self, params: Params, h, r, t) -> jnp.ndarray:
+        he = params["entity"][h]
+        te = params["entity"][t]
+        re = params["relation"][r]
+        w = params["proj"][r]
+        hp = self._project(he, w)
+        tp = self._project(te, w)
+        return -self._dist(hp + re - tp)
+
+    def score_all_tails(self, params: Params, h, r) -> jnp.ndarray:
+        w = params["proj"][r]                                   # (B, d, d)
+        hp = self._project(params["entity"][h], w)              # (B, d)
+        # project every entity through each query's relation matrix
+        allp = jnp.einsum("nd,bde->bne", params["entity"], w)   # (B, N, d)
+        norm = jnp.linalg.norm(allp, axis=-1, keepdims=True)
+        allp = allp / jnp.maximum(norm, 1.0)
+        q = hp + params["relation"][r]                          # (B, d)
+        return -self._dist(q[:, None, :] - allp)
+
+    def score_all_heads(self, params: Params, r, t) -> jnp.ndarray:
+        w = params["proj"][r]
+        tp = self._project(params["entity"][t], w)
+        allp = jnp.einsum("nd,bde->bne", params["entity"], w)
+        norm = jnp.linalg.norm(allp, axis=-1, keepdims=True)
+        allp = allp / jnp.maximum(norm, 1.0)
+        q = tp - params["relation"][r]                          # h_p ≈ t_p - r
+        return -self._dist(allp - q[:, None, :])
+
+    def constrain(self, params: Params) -> Params:
+        ent = params["entity"]
+        norm = jnp.linalg.norm(ent, axis=-1, keepdims=True)
+        return {**params, "entity": ent / jnp.maximum(norm, 1.0)}

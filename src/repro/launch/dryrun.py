@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, with ShapeDtypeStruct inputs
+(zero allocation), and extract memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --kge go
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json and
+feed benchmarks/roofline.py -> EXPERIMENTS.md.
+
+The two XLA_FLAGS lines above MUST stay the first statements: jax locks the
+device count at first init. Everything else (smoke tests, benches) sees the
+single real CPU device.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+REPO = Path(__file__).resolve().parents[3]
+sys.path.insert(0, str(REPO))
+
+from benchmarks.roofline import (ICI_BW, analyze_hlo, collective_summary,
+                                 memory_traffic_proxy, model_flops,
+                                 roofline_terms)
+from repro.configs.shapes import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.models import ARCH_IDS, build, get_config
+from repro.models import runtime
+from repro.models.sharding import (batch_pspec, batch_shardings,
+                                   cache_shardings, param_shardings)
+from repro.models.steps import (make_prefill_step, make_serve_step,
+                                make_train_step, prefill_specs, serve_specs,
+                                train_specs)
+from repro.optim.adam import OptState
+
+RESULTS = REPO / "benchmarks" / "results" / "dryrun"
+
+#: last compiled HLO text (benchmarks/inspect_hlo.py reads this)
+_LAST_HLO = ""
+
+#: production runtime carries one KV slot per model-axis shard
+PROD_KV_GROUPS = 16
+
+
+def _mem_analysis(compiled):
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if m is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(m, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_analysis(compiled):
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return {k: float(v) for k, v in dict(c).items()
+            if isinstance(v, (int, float))}
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               save: bool = True, force: bool = False,
+               override=None) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    out_path = RESULTS / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    shape = SHAPES[shape_name]
+    dp_blocks = 32 if multi_pod else 16
+    cfg = get_config(arch).with_(kv_groups=PROD_KV_GROUPS,
+                                 moe_dp_blocks=dp_blocks,
+                                 moe_impl="shard_map")
+    if cfg.moe is not None and cfg.moe.n_experts % 16:
+        # virtual ff-split so experts divide the model axis (grok: 8e -> 16)
+        import math as _math
+        cfg = cfg.with_(moe_ff_split=16 // _math.gcd(cfg.moe.n_experts, 16))
+    if cfg.d_model <= 2560 and shape.step == "train":
+        # small-activation archs: full activations fit HBM comfortably, and
+        # dropping remat removes the recomputed per-layer collectives
+        # (measured: danube train bound 5.91 -> 4.92 s; §Perf)
+        cfg = cfg.with_(remat="none")
+    if override:
+        cfg = cfg.with_(**override)
+    if not applicable(cfg, shape):
+        rec = {"tag": tag, "status": "skipped",
+               "reason": "full-attention arch at 524k decode (quadratic); "
+                         "see DESIGN.md shape-applicability"}
+        if save:
+            RESULTS.mkdir(parents=True, exist_ok=True)
+            out_path.write_text(json.dumps(rec, indent=2))
+        return rec
+
+    model = build(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.perf_counter()
+
+    with mesh, runtime.use_mesh(mesh):
+        if shape.step == "train":
+            step, optimizer = make_train_step(model)
+            params, opt_state, batch = train_specs(
+                model, shape.global_batch, shape.seq_len)
+            p_sh = param_shardings(cfg, mesh, params)
+            o_sh = OptState(NamedSharding(mesh, P()),
+                            param_shardings(cfg, mesh, opt_state.mu),
+                            param_shardings(cfg, mesh, opt_state.nu))
+            b_sh = batch_shardings(mesh, shape.global_batch, batch)
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params, opt_state, batch)
+        elif shape.step == "prefill":
+            step = make_prefill_step(model)
+            params, batch = prefill_specs(model, shape.global_batch,
+                                          shape.seq_len)
+            p_sh = param_shardings(cfg, mesh, params)
+            b_sh = batch_shardings(mesh, shape.global_batch, batch)
+            cache_sds = model.cache_spec(shape.global_batch, shape.seq_len)
+            c_sh = cache_shardings(cfg, mesh, shape.global_batch, cache_sds)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(None, c_sh))
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            step = make_serve_step(model)
+            params, cache, token, pos = serve_specs(
+                model, shape.global_batch, shape.seq_len)
+            p_sh = param_shardings(cfg, mesh, params)
+            c_sh = cache_shardings(cfg, mesh, shape.global_batch, cache)
+            t_sh = NamedSharding(mesh, batch_pspec(mesh, shape.global_batch, 2))
+            fn = jax.jit(step,
+                         in_shardings=(p_sh, c_sh, t_sh,
+                                       NamedSharding(mesh, P())),
+                         out_shardings=(t_sh, c_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(params, cache, token, pos)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    global _LAST_HLO
+    cost = _cost_analysis(compiled)
+    mem = _mem_analysis(compiled)
+    _LAST_HLO = compiled.as_text()
+    hlo = analyze_hlo(_LAST_HLO)
+    coll = {"n_ops": hlo["n_collectives"],
+            "traffic_bytes": hlo["collective_bytes"],
+            "by_kind": hlo["by_kind"]}
+
+    # loop-aware totals (XLA cost_analysis counts scan bodies once; see
+    # benchmarks/roofline.py). memory: buffer-assignment traffic proxy.
+    flops_dev = hlo["flops"]
+    bytes_dev = float(memory_traffic_proxy(mem)) or cost.get("bytes accessed", 0.0)
+    terms = roofline_terms(flops_dev, bytes_dev, coll["traffic_bytes"])
+
+    dec_len = None
+    if cfg.family == "audio":
+        from repro.models.encdec import _dec_len
+        dec_len = _dec_len(shape.seq_len, cfg.dec_len_cap)
+    mf = model_flops(
+        cfg.n_active_params() if cfg.moe else cfg.n_params(),
+        shape.step, shape.global_batch, shape.seq_len, dec_len)
+
+    rec = {
+        "tag": tag, "status": "ok",
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": int(n_dev), "step": shape.step,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "xla_cost": cost, "memory": mem, "collectives": coll,
+        "flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+        "roofline": terms,
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf / n_dev,
+        "useful_ratio": (mf / n_dev) / flops_dev if flops_dev else None,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def dryrun_kge(workload: str, multi_pod: bool, save: bool = True,
+               force: bool = False) -> dict:
+    """The paper's own workload on the production mesh: sharded KGE train
+    step over the full-size synthetic GO/HP (40k/18k entities, dim 200)."""
+    mesh_name = "multi" if multi_pod else "single"
+    tag = f"kge-{workload}__train__{mesh_name}"
+    out_path = RESULTS / f"{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    import importlib
+    wl = importlib.import_module(f"repro.configs.{workload}_kge").CONFIG
+    from repro.kge import make_model
+    from repro.kge.train import TrainConfig, make_train_step as kge_step
+    from repro.optim import OPTIMIZERS
+
+    n_ent = wl.n_terms
+    model = make_model("transe", n_ent, 3, dim=wl.dim)
+    tc = TrainConfig(batch_size=8192, num_negs=32)
+    optimizer = OPTIMIZERS[tc.optimizer](tc.lr)
+    step, _ = kge_step(model, optimizer, tc)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    opt_state = jax.eval_shape(optimizer.init, params)
+    triples = jax.ShapeDtypeStruct((tc.batch_size, 3), jnp.int32)
+    key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+
+    with mesh:
+        pspec = model.param_shardings("model", axis_size=mesh.shape["model"])
+        p_sh = {k: NamedSharding(mesh, v) for k, v in pspec.items()}
+        o_sh = OptState(NamedSharding(mesh, P()),
+                        {k: p_sh[k] for k in p_sh},
+                        {k: p_sh[k] for k in p_sh})
+        dp = ("pod", "data") if multi_pod else ("data",)
+        b_sh = NamedSharding(mesh, P(dp, None))
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh,
+                                         NamedSharding(mesh, P())),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=(0, 1))
+        t0 = time.perf_counter()
+        lowered = fn.lower(params, opt_state, triples, key)
+        compiled = lowered.compile()
+        dt = time.perf_counter() - t0
+
+    cost = _cost_analysis(compiled)
+    mem = _mem_analysis(compiled)
+    hlo = analyze_hlo(compiled.as_text())
+    coll = {"n_ops": hlo["n_collectives"],
+            "traffic_bytes": hlo["collective_bytes"],
+            "by_kind": hlo["by_kind"]}
+    terms = roofline_terms(hlo["flops"],
+                           float(memory_traffic_proxy(mem)),
+                           coll["traffic_bytes"])
+    rec = {"tag": tag, "status": "ok", "workload": workload,
+           "n_entities": n_ent, "dim": wl.dim,
+           "n_devices": int(mesh.devices.size),
+           "compile_s": round(dt, 2), "xla_cost": cost,
+           "memory": mem, "collectives": coll,
+           "roofline": terms}
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kge", default=None, choices=["go", "hp"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    jobs = []
+    if args.kge:
+        for mp in meshes:
+            jobs.append(("kge", args.kge, None, mp))
+    elif args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    jobs.append(("arch", arch, shape, mp))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all/--kge)"
+        for mp in meshes:
+            jobs.append(("arch", args.arch, args.shape, mp))
+
+    failures = 0
+    for kind, a, s, mp in jobs:
+        label = f"{a}__{s}__{'multi' if mp else 'single'}" if s else \
+            f"kge-{a}__{'multi' if mp else 'single'}"
+        t0 = time.perf_counter()
+        try:
+            if kind == "kge":
+                rec = dryrun_kge(a, mp, force=args.force)
+            else:
+                rec = dryrun_one(a, s, mp, force=args.force)
+            dt = time.perf_counter() - t0
+            status = rec["status"]
+            if status == "ok":
+                r = rec["roofline"]
+                print(f"[{dt:7.1f}s] {label:55s} OK "
+                      f"dom={r['dominant']:12s} bound={r['bound_s']:.3e}s "
+                      f"coll={rec['collectives']['traffic_bytes']:.2e}B",
+                      flush=True)
+            else:
+                print(f"[{dt:7.1f}s] {label:55s} SKIP ({rec['reason'][:60]})",
+                      flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"[{time.perf_counter()-t0:7.1f}s] {label:55s} FAIL {e}",
+                  flush=True)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

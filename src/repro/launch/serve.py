@@ -1,0 +1,84 @@
+"""Serving launcher — the paper's deployment mode.
+
+Stands up the Bio-KGvec2go serving engine over a registry (training the
+snapshots first if the registry is empty), then runs a batched request
+session against the three endpoints and reports latency:
+
+    PYTHONPATH=src python -m repro.launch.serve --registry /tmp/biokg \
+        --requests 200 --batch 32
+
+The Flask/Apache layer of the paper is a thin HTTP shim over exactly these
+calls (see DESIGN.md §8); this driver exercises the same engine the way the
+production WSGI worker would.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--registry", default="/tmp/biokgvec2go")
+    ap.add_argument("--ontology", default="go")
+    ap.add_argument("--model", default="transe")
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--train-if-missing", action="store_true", default=True)
+    args = ap.parse_args()
+
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import RequestBatcher, ServingEngine, TopKRequest
+
+    registry = EmbeddingRegistry(args.registry)
+    if not registry.versions(args.ontology):
+        print(f"[serve] registry empty; training {args.ontology} snapshots")
+        from .train import train_kge
+        train_kge(args.ontology, args.registry, steps=150, n_terms=800)
+
+    engine = ServingEngine(registry)
+    ids, labels, emb, meta = registry.get(args.ontology, args.model)
+    print(f"[serve] {args.ontology}/{meta['version']}/{args.model}: "
+          f"{len(ids)} classes, dim={meta['dim']}")
+
+    rng = np.random.default_rng(0)
+
+    # -- endpoint 1: download ------------------------------------------- #
+    t0 = time.perf_counter()
+    payload = engine.download(args.ontology, args.model)
+    print(f"[serve] download: {len(payload)/1e6:.2f} MB JSON "
+          f"in {time.perf_counter()-t0:.2f}s")
+
+    # -- endpoint 2: similarity ----------------------------------------- #
+    lat = []
+    for _ in range(args.requests):
+        a, b = (ids[i] for i in rng.integers(0, len(ids), 2))
+        t0 = time.perf_counter()
+        engine.similarity(args.ontology, args.model, a, b)
+        lat.append(time.perf_counter() - t0)
+    lat = np.array(lat) * 1e3
+    print(f"[serve] similarity: p50={np.percentile(lat,50):.3f}ms "
+          f"p99={np.percentile(lat,99):.3f}ms over {args.requests} requests")
+
+    # -- endpoint 3: top-k closest, batched ------------------------------ #
+    batcher = RequestBatcher(engine, max_batch=args.batch)
+    t0 = time.perf_counter()
+    tickets = [batcher.submit(TopKRequest(args.ontology, args.model,
+                                          ids[int(i)], args.k))
+               for i in rng.integers(0, len(ids), args.requests)]
+    results = batcher.flush()
+    dt = time.perf_counter() - t0
+    print(f"[serve] top-{args.k}: {args.requests} requests in {dt:.2f}s "
+          f"({args.requests/dt:.0f} req/s batched)")
+    sample = results[tickets[0]]
+    print("[serve] sample result:")
+    for c in sample[:3]:
+        print(f"    {c.identifier:12s} {c.score:.4f}  {c.label[:40]}  {c.url}")
+
+
+if __name__ == "__main__":
+    main()

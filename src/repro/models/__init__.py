@@ -1,0 +1,8 @@
+from .config import ArchConfig, HybridConfig, MoEConfig, SSMConfig
+from .zoo import ARCH_IDS, FAMILIES, build, get_config, get_model, normalize_arch_id
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "HybridConfig",
+    "ARCH_IDS", "FAMILIES", "build", "get_config", "get_model",
+    "normalize_arch_id",
+]

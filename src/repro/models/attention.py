@@ -1,0 +1,226 @@
+"""Attention for the model zoo — pure-JAX, chunked (flash-style) online
+softmax so 32k prefill never materializes an (S, S) score matrix.
+
+Layout convention (the "grouped-MHA" view used everywhere):
+
+    q        (B, Sq, G, H, hd)   G = cfg.groups KV slots, H = heads/slot
+    k, v     (B, Sk, G, hd)
+    output   (B, Sq, G, H, hd)
+
+G is the runtime KV-slot count (= model-axis size in production so the KV
+cache shards on its own axis; = n_kv_heads on CPU). Published KV heads are
+``jnp.repeat``-ed to G; published q-heads are zero-padded per KV group
+(see config.ArchConfig docstring). All accumulation in fp32.
+
+Three paths:
+  * ``chunked_attention``  — train/prefill, causal or not, full attention.
+    Nested scan over q-chunks x kv-chunks; peak live score block is
+    (B, G, H, cq, ck).
+  * ``swa_attention``      — sliding-window train/prefill. One scan over
+    q-chunks, each attending a static (window + cq) KV slice => cost is
+    O(S·W), which is what makes long_500k lowerable for dense archs.
+  * ``decode_attention``   — single-token decode against a KV cache
+    (optionally a rolling buffer for SWA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _online_update(carry, s, vj):
+    """One flash-attention accumulator update.
+
+    carry = (m, l, acc): (B,G,H,cq), (B,G,H,cq), (B,G,H,cq,hd)
+    s:   (B,G,H,cq,ck) masked scores (NEG where disallowed)
+    vj:  (B,ck,G,hd)
+    """
+    m, l, acc = carry
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    # guard: rows that are still fully masked keep m at NEG; exp(s-m) would
+    # be exp(0)=1 for masked entries, so explicitly zero them.
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(s <= NEG / 2, 0.0, p)
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bghqk,bkgd->bghqd", p.astype(vj.dtype), vj,
+                    preferred_element_type=jnp.float32)
+    acc = acc * alpha[..., None] + pv
+    return m_new, l, acc
+
+
+def _finish(m, l, acc, dtype):
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None], 0.0)
+    return out.astype(dtype)  # (B,G,H,cq,hd)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> Tuple[jnp.ndarray, int]:
+    n = x.shape[axis]
+    pad = -n % mult
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, n
+
+
+def chunked_attention(
+    q: jnp.ndarray,            # (B, Sq, G, H, hd)
+    k: jnp.ndarray,            # (B, Sk, G, hd)
+    v: jnp.ndarray,            # (B, Sk, G, hd)
+    *,
+    causal: bool = True,
+    q_offset: int = 0,         # absolute position of q[0] (cross-chunk causal)
+    chunk_q: int = 512,
+    chunk_kv: int = 512,
+) -> jnp.ndarray:
+    B, Sq, G, H, hd = q.shape
+    Sk = k.shape[1]
+    cq, ck = min(chunk_q, Sq), min(chunk_kv, Sk)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+
+    q, Sq0 = _pad_to(q * scale, 1, cq)
+    k, Sk0 = _pad_to(k, 1, ck)
+    v, _ = _pad_to(v, 1, ck)
+    nq, nk = q.shape[1] // cq, k.shape[1] // ck
+
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, G, H, hd), 1, 0)   # (nq,B,cq,G,H,hd)
+    kc = jnp.moveaxis(k.reshape(B, nk, ck, G, hd), 1, 0)      # (nk,B,ck,G,hd)
+    vc = jnp.moveaxis(v.reshape(B, nk, ck, G, hd), 1, 0)
+
+    def q_chunk(_, qi_i):
+        qi, i = qi_i                                           # (B,cq,G,H,hd)
+        q_pos = q_offset + i * cq + jnp.arange(cq)             # (cq,)
+
+        def kv_step(carry, kj_vj_j):
+            kj, vj, j = kj_vj_j
+            s = jnp.einsum("bqghd,bkgd->bghqk", qi, kj,
+                           preferred_element_type=jnp.float32)
+            k_pos = j * ck + jnp.arange(ck)
+            ok = (k_pos[None, :] < Sk0) & (jnp.arange(cq)[:, None] + i * cq < Sq0)
+            if causal:
+                ok &= k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(ok[None, None, None], s, NEG)
+            return _online_update(carry, s, vj), None
+
+        m0 = jnp.full((B, G, H, cq), NEG, jnp.float32)
+        l0 = jnp.zeros((B, G, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, G, H, cq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+        out = _finish(m, l, acc, q.dtype)                      # (B,G,H,cq,hd)
+        return None, jnp.moveaxis(out, 3, 1)                   # (B,cq,G,H,hd)
+
+    _, outs = jax.lax.scan(q_chunk, None, (qc, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * cq, G, H, hd)
+    return out[:, :Sq0]
+
+
+def swa_attention(
+    q: jnp.ndarray,            # (B, Sq, G, H, hd)
+    k: jnp.ndarray,            # (B, Sk, G, hd)  (Sk == Sq for train/prefill)
+    v: jnp.ndarray,
+    *,
+    window: int,
+    q_offset: int = 0,
+    chunk_q: int = 512,
+) -> jnp.ndarray:
+    """Causal sliding-window attention: position i attends (i-window, i].
+
+    Each q chunk sees a static-length KV slice of (window + cq) — cost
+    O(S * W) rather than O(S^2).
+    """
+    B, Sq, G, H, hd = q.shape
+    Sk = k.shape[1]
+    cq = min(chunk_q, Sq)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+
+    q, Sq0 = _pad_to(q * scale, 1, cq)
+    nq = q.shape[1] // cq
+    W = window
+    # front-pad KV by W so slice [i*cq : i*cq + W + cq) covers (q_pos - W, q_pos]
+    kp = jnp.pad(k, ((0, 0), (W, (nq * cq) - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, (nq * cq) - Sk), (0, 0), (0, 0)))
+    qc = jnp.moveaxis(q.reshape(B, nq, cq, G, H, hd), 1, 0)
+
+    def q_chunk(_, qi_i):
+        qi, i = qi_i
+        ks = jax.lax.dynamic_slice_in_dim(kp, i * cq, W + cq, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(vp, i * cq, W + cq, axis=1)
+        s = jnp.einsum("bqghd,bkgd->bghqk", qi, ks,
+                       preferred_element_type=jnp.float32)
+        q_pos = q_offset + i * cq + jnp.arange(cq)             # (cq,)
+        k_pos = q_offset + i * cq - W + jnp.arange(W + cq)     # (W+cq,)
+        ok = ((k_pos[None, :] >= 0)
+              & (k_pos[None, :] <= q_pos[:, None])
+              & (q_pos[:, None] - k_pos[None, :] < W)
+              & (jnp.arange(cq)[:, None] + i * cq < Sq0))
+        s = jnp.where(ok[None, None, None], s, NEG)
+        m = jnp.max(s, axis=-1)
+        p = jnp.where(s <= NEG / 2, 0.0, jnp.exp(s - m[..., None]))
+        l = jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bghqk,bkgd->bghqd", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        out = _finish(m, l, pv, q.dtype)
+        return None, jnp.moveaxis(out, 3, 1)
+
+    _, outs = jax.lax.scan(q_chunk, None, (qc, jnp.arange(nq)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * cq, G, H, hd)
+    return out[:, :Sq0]
+
+
+def plain_attention(
+    q: jnp.ndarray,            # (B, Sq, G, H, hd)
+    k: jnp.ndarray,            # (B, Sk, G, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool = False,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Unchunked attention — for short decoder/cross-attn sequences."""
+    B, Sq, G, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+    s = jnp.einsum("bqghd,bkgd->bghqk", q * scale, k,
+                   preferred_element_type=jnp.float32)
+    if causal:
+        q_pos = q_offset + jnp.arange(Sq)
+        ok = jnp.arange(Sk)[None, :] <= q_pos[:, None]
+        s = jnp.where(ok[None, None, None], s, NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(s <= NEG / 2, 0.0, jnp.exp(s - m[..., None]))
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bghqk,bkgd->bghqd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    out = _finish(m, l, pv, q.dtype)
+    return jnp.moveaxis(out, 3, 1)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, 1, G, H, hd)
+    k_cache: jnp.ndarray,      # (B, G, S, hd)  (post-RoPE keys)
+    v_cache: jnp.ndarray,      # (B, G, S, hd)
+    n_valid: jnp.ndarray,      # scalar int — number of valid cache slots
+) -> jnp.ndarray:
+    """One-token decode. For rolling (SWA) caches the caller passes
+    n_valid = min(pos+1, window); slot order is irrelevant because keys are
+    stored post-RoPE."""
+    B, _, G, H, hd = q.shape
+    S = k_cache.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+    s = jnp.einsum("bqghd,bgkd->bghqk", q * scale, k_cache,
+                   preferred_element_type=jnp.float32)       # (B,G,H,1,S)
+    ok = jnp.arange(S)[None, None, None, None, :] < n_valid
+    s = jnp.where(ok, s, NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(s <= NEG / 2, 0.0, jnp.exp(s - m[..., None]))
+    l = jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bghqk,bgkd->bghqd", p.astype(v_cache.dtype), v_cache,
+                    preferred_element_type=jnp.float32)
+    out = _finish(m, l, pv, q.dtype)
+    return jnp.moveaxis(out, 3, 1)                            # (B,1,G,H,hd)

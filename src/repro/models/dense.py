@@ -1,0 +1,105 @@
+"""Dense decoder-only LM (mistral-large, qwen2, internlm2, h2o-danube).
+
+h2o-danube uses sliding-window attention (cfg.attention == "sliding_window"),
+which is also the beyond-paper long_500k override for other dense archs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ArchConfig
+from .layers import stacked_init
+from .lm import BaseLM, scan_decode, scan_layers, scan_prefill
+
+
+def _maybe_seq_shard(h, cfg):
+    """Megatron-SP-style residual constraint: sequence-shard (B, S, d)
+    over "model" between blocks, so XLA emits reduce-scatter + all-gather
+    pairs around each block instead of all-reduces (\u00a7Perf dense
+    experiment)."""
+    if not cfg.seq_shard:
+        return h
+    from . import runtime
+    mesh = runtime.get_mesh()
+    if mesh is None:
+        return h
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return jax.lax.with_sharding_constraint(h, P(dp, "model", None))
+
+
+class DenseLM(BaseLM):
+    @property
+    def window(self):
+        return self.cfg.window if self.cfg.attention == "sliding_window" else None
+
+    def init_layers(self, key):
+        return stacked_init(lambda k: blocks.block_init(k, self.cfg),
+                            key, self.cfg.n_layers)
+
+    def backbone(self, params, x):
+        def body(p, h):
+            h = blocks.block_apply(p, h, self.cfg, window=self.window)
+            return _maybe_seq_shard(h, self.cfg)
+        h = scan_layers(params["layers"], x, body, self.cfg)
+        return h, jnp.asarray(0.0, jnp.float32)
+
+    @property
+    def quantized_cache(self):
+        return self.cfg.kv_cache_dtype == "int8"
+
+    def backbone_prefill(self, params, x, cache_len=None):
+        def body(p, h):
+            return blocks.block_prefill(p, h, self.cfg, window=self.window)
+        h, kcs, vcs = scan_prefill(params["layers"], x, body)
+        if cache_len is not None and self.window is None:
+            pad = cache_len - kcs.shape[3]
+            if pad > 0:
+                widths = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
+                kcs, vcs = jnp.pad(kcs, widths), jnp.pad(vcs, widths)
+        if self.quantized_cache:
+            kcs, ks = blocks.quantize_kv(kcs)
+            vcs, vs = blocks.quantize_kv(vcs)
+            return h, {"k": kcs, "v": vcs, "k_scale": ks, "v_scale": vs}
+        return h, {"k": kcs, "v": vcs}
+
+    def backbone_decode(self, params, cache, x, pos):
+        from .lm import loop_decode_inplace
+        quant = self.quantized_cache
+
+        def body(p, h, kc, vc, *rest):
+            *scales, layer = rest
+            out = blocks.attn_decode_inplace(
+                p["attn"], blocks.apply_norm(p["ln1"], h), kc, vc, layer,
+                pos, self.cfg, window=self.window,
+                k_scale=scales[0] if quant else None,
+                v_scale=scales[1] if quant else None)
+            a, *caches = out
+            h = h + a
+            h = h + blocks.mlp(p["mlp"], blocks.apply_norm(p["ln2"], h),
+                               self.cfg.act)
+            return (h, *caches)
+
+        names = ("k", "v", "k_scale", "v_scale") if quant else ("k", "v")
+        h, caches = loop_decode_inplace(
+            params["layers"], tuple(cache[n] for n in names), x, body)
+        return h, dict(zip(names, caches))
+
+    def cache_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        Sc = min(seq, cfg.window) if self.window is not None else seq
+        shp = (cfg.n_layers, batch, cfg.groups, Sc, cfg.hd)
+        if self.quantized_cache:
+            return {"k": jax.ShapeDtypeStruct(shp, jnp.int8),
+                    "v": jax.ShapeDtypeStruct(shp, jnp.int8),
+                    "k_scale": jax.ShapeDtypeStruct(shp[:-1], jnp.float32),
+                    "v_scale": jax.ShapeDtypeStruct(shp[:-1], jnp.float32)}
+        return {"k": jax.ShapeDtypeStruct(shp, cfg.jdtype),
+                "v": jax.ShapeDtypeStruct(shp, cfg.jdtype)}
+
+    def supports_long_context(self) -> bool:
+        return self.cfg.attention == "sliding_window"

@@ -1,0 +1,196 @@
+"""Encoder-decoder audio model — whisper-base backbone.
+
+The modality frontend (mel spectrogram + conv downsampler) is a STUB per
+the assignment: ``batch["frames"]`` carries precomputed frame embeddings
+(B, S_enc, d). The transformer is real: non-causal chunked self-attention
+encoder, causal decoder with cross-attention, GELU MLPs, LayerNorm,
+sinusoidal encoder positions, learned decoder positions, tied softmax.
+
+Shape mapping (see DESIGN.md): the assigned ``seq_len`` is the *encoder*
+frame count; the decoder is capped at ``cfg.dec_len_cap`` (whisper: 448),
+its design maximum. decode_32k therefore means: cross-attend a 32k-frame
+encoder memory while decoding with a 448-slot self-attention cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ArchConfig
+from .layers import apply_norm, dense, mlp, mlp_init, norm_init, stacked_init
+from .lm import BaseLM, embed_init, maybe_remat, scan_decode, scan_layers, scan_prefill, xent
+
+Params = Dict[str, Any]
+
+
+def sinusoid(S: int, d: int, dtype) -> jnp.ndarray:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def _dec_len(seq: int, cap: int) -> int:
+    return max(8, min(cap, seq // 8))
+
+
+def cross_attn_apply(p: Params, x: jnp.ndarray, mem: jnp.ndarray,
+                     cfg: ArchConfig) -> jnp.ndarray:
+    """q from x (B,Sq,d); k/v from encoder memory (B,Sk,d)."""
+    k, v = _cross_kv(p, mem, cfg)
+    return _cross_attend(p, x, k, v, cfg)
+
+
+def _cross_kv(p: Params, mem: jnp.ndarray, cfg: ArchConfig):
+    B, Sk, _ = mem.shape
+    hd, kv, G = cfg.hd, cfg.n_kv_heads, cfg.groups
+    k = dense(p["wk"], mem).reshape(B, Sk, kv, hd)
+    v = dense(p["wv"], mem).reshape(B, Sk, kv, hd)
+    if G != kv:
+        k = jnp.repeat(k, G // kv, axis=2)
+        v = jnp.repeat(v, G // kv, axis=2)
+    return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)    # (B,G,Sk,hd)
+
+
+def _cross_attend(p: Params, x: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  cfg: ArchConfig) -> jnp.ndarray:
+    from .attention import plain_attention
+    B, Sq, _ = x.shape
+    hd, G = cfg.hd, cfg.groups
+    hp = cfg.padded_heads()
+    q = dense(p["wq"], x).reshape(B, Sq, G, hp // G, hd)
+    o = plain_attention(q, jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1),
+                        causal=False)
+    return dense(p["wo"], o.reshape(B, Sq, -1))
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "attn": blocks.attn_init(k1, cfg),
+        "lnx": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "xattn": blocks.attn_init(k2, cfg),
+        "ln2": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.jdtype, cfg.act),
+    }
+
+
+class EncDecModel(BaseLM):
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        return {
+            "enc_layers": stacked_init(
+                lambda k: blocks.block_init(k, cfg), ks[0], cfg.n_layers),
+            "ln_e": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+            "embed": embed_init(ks[1], cfg.padded_vocab, cfg.d_model, cfg.jdtype),
+            "dec_pos": embed_init(ks[2], cfg.dec_len_cap, cfg.d_model, cfg.jdtype),
+            "dec_layers": stacked_init(
+                lambda k: _dec_layer_init(k, cfg), ks[3], cfg.n_layers),
+            "ln_f": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        }
+
+    # ---------------- encoder ---------------- #
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        cfg = self.cfg
+        x = frames + sinusoid(frames.shape[1], cfg.d_model, frames.dtype)
+
+        def body(p, h):
+            return blocks.block_apply(p, h, cfg, causal=False)
+        h = scan_layers(params["enc_layers"], x, body, cfg)
+        return apply_norm(params["ln_e"], h)
+
+    # ---------------- decoder ---------------- #
+    def _dec_embed(self, params, tokens, pos0=0):
+        S = tokens.shape[1]
+        return (params["embed"][tokens]
+                + params["dec_pos"][pos0 + jnp.arange(S)])
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        mem = self.encode(params, batch["frames"])
+        x = self._dec_embed(params, batch["tokens"])
+
+        def body(p, h):
+            h = h + blocks.attn_apply(p["attn"], apply_norm(p["ln1"], h), cfg,
+                                      causal=True)
+            h = h + cross_attn_apply(p["xattn"], apply_norm(p["lnx"], h), mem,
+                                     cfg)
+            h = h + mlp(p["mlp"], apply_norm(p["ln2"], h), cfg.act)
+            return h
+        h = scan_layers(params["dec_layers"], x, body, cfg)
+        h = apply_norm(params["ln_f"], h)
+        logits = h @ params["embed"].T
+        loss, acc = xent(logits, batch["labels"])
+        return loss, {"ce": loss, "aux": jnp.asarray(0.0, jnp.float32),
+                      "acc": acc}
+
+    # ---------------- serving ---------------- #
+    def prefill(self, params, batch, cache_len=None):
+        """Encode frames, run decoder prompt, build both caches (the self-
+        attention cache is always padded to dec_len_cap; cache_len ignored)."""
+        cfg = self.cfg
+        mem = self.encode(params, batch["frames"])
+        x = self._dec_embed(params, batch["tokens"])
+        cap = cfg.dec_len_cap
+        S = x.shape[1]
+
+        def body(h, p):
+            a, kc, vc = blocks.attn_prefill(p["attn"], apply_norm(p["ln1"], h),
+                                            cfg)
+            h = h + a
+            xk, xv = _cross_kv(p["xattn"], mem, cfg)
+            h = h + _cross_attend(p["xattn"], apply_norm(p["lnx"], h), xk, xv,
+                                  cfg)
+            h = h + mlp(p["mlp"], apply_norm(p["ln2"], h), cfg.act)
+            pad = cap - kc.shape[2]
+            kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            return h, (kc, vc, xk, xv)
+        h, (kcs, vcs, xks, xvs) = jax.lax.scan(body, x, params["dec_layers"])
+        h = apply_norm(params["ln_f"], h[:, -1:])
+        logits = h @ params["embed"].T
+        return logits, {"k": kcs, "v": vcs, "xk": xks, "xv": xvs}
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = self._dec_embed(params, token, pos0=pos)
+
+        def body(p, h, kc, vc, xk, xv):
+            a, kc, vc = blocks.attn_decode(p["attn"], apply_norm(p["ln1"], h),
+                                           kc, vc, pos, cfg)
+            h = h + a
+            h = h + _cross_attend(p["xattn"], apply_norm(p["lnx"], h), xk, xv,
+                                  cfg)
+            h = h + mlp(p["mlp"], apply_norm(p["ln2"], h), cfg.act)
+            return h, kc, vc, xk, xv
+        h, (kcs, vcs, xks, xvs) = scan_decode(
+            params["dec_layers"],
+            (cache["k"], cache["v"], cache["xk"], cache["xv"]), x, body)
+        h = apply_norm(params["ln_f"], h)
+        logits = h @ params["embed"].T
+        return logits, {"k": kcs, "v": vcs, "xk": xks, "xv": xvs}
+
+    # ---------------- specs ---------------- #
+    def batch_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        dl = _dec_len(seq, cfg.dec_len_cap)
+        return {
+            "frames": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), cfg.jdtype),
+            "tokens": jax.ShapeDtypeStruct((batch, dl), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, dl), jnp.int32),
+        }
+
+    def cache_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        L, G, hd = cfg.n_layers, cfg.groups, cfg.hd
+        return {
+            "k": jax.ShapeDtypeStruct((L, batch, G, cfg.dec_len_cap, hd), cfg.jdtype),
+            "v": jax.ShapeDtypeStruct((L, batch, G, cfg.dec_len_cap, hd), cfg.jdtype),
+            "xk": jax.ShapeDtypeStruct((L, batch, G, seq, hd), cfg.jdtype),
+            "xv": jax.ShapeDtypeStruct((L, batch, G, seq, hd), cfg.jdtype),
+        }

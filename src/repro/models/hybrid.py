@@ -1,0 +1,181 @@
+"""Hybrid recurrent/attention LM — recurrentgemma-2b (Griffin).
+
+Layer pattern repeats (recurrent, recurrent, local-attention); every layer
+is a temporal-mixing residual followed by an MLP residual. The full periods
+run under one ``lax.scan`` (params stacked over periods); the remainder
+layers (26 = 8*3 + 2) are unrolled.
+
+Decode state: per recurrent layer an RG-LRU hidden (B, w) fp32 + conv tail;
+per attention layer a rolling window KV cache (window 2048) — all constant
+in sequence length => long_500k capable.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ArchConfig
+from .layers import apply_norm, mlp, mlp_init, norm_init, stacked_init
+from .lm import BaseLM, maybe_remat
+
+Params = Dict[str, Any]
+
+
+def _rec_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+            "rec": blocks.rglru_init(k1, cfg),
+            "ln2": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.jdtype, cfg.act)}
+
+
+def _attn_layer_init(key, cfg):
+    return blocks.block_init(key, cfg)
+
+
+class HybridLM(BaseLM):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        self.period = len(cfg.hybrid.pattern)              # 3
+        self.n_periods = cfg.n_layers // self.period
+        self.rem = tuple(cfg.hybrid.pattern[:cfg.n_layers % self.period])
+
+    # ---------------- params ---------------- #
+    def init_layers(self, key):
+        cfg = self.cfg
+        kp, kr = jax.random.split(key)
+
+        def period_init(k):
+            ks = jax.random.split(k, self.period)
+            out = {}
+            for i, kind in enumerate(cfg.hybrid.pattern):
+                fn = _rec_layer_init if kind == "recurrent" else _attn_layer_init
+                out[f"l{i}"] = fn(ks[i], cfg)
+            return out
+
+        p = {"periods": stacked_init(period_init, kp, self.n_periods)}
+        krs = jax.random.split(kr, max(len(self.rem), 1))
+        for i, kind in enumerate(self.rem):
+            fn = _rec_layer_init if kind == "recurrent" else _attn_layer_init
+            p[f"rem{i}"] = fn(krs[i], cfg)
+        return p
+
+    # ---------------- train ---------------- #
+    def _apply_layer(self, kind: str, p, h):
+        cfg = self.cfg
+        if kind == "recurrent":
+            h = h + blocks.rglru_apply(p["rec"], apply_norm(p["ln1"], h), cfg)
+            h = h + mlp(p["mlp"], apply_norm(p["ln2"], h), cfg.act)
+            return h
+        return blocks.block_apply(p, h, cfg, window=cfg.hybrid.window)
+
+    def backbone(self, params, x):
+        cfg = self.cfg
+
+        def period_body(p, h):
+            for i, kind in enumerate(cfg.hybrid.pattern):
+                h = self._apply_layer(kind, p[f"l{i}"], h)
+            return h
+        body = maybe_remat(period_body, cfg)
+
+        def f(h, p):
+            return body(p, h), None
+        h, _ = jax.lax.scan(f, x, params["layers"]["periods"])
+        for i, kind in enumerate(self.rem):
+            h = self._apply_layer(kind, params["layers"][f"rem{i}"], h)
+        return h, jnp.asarray(0.0, jnp.float32)
+
+    # ---------------- prefill ---------------- #
+    def _prefill_layer(self, kind, p, h):
+        cfg = self.cfg
+        if kind == "recurrent":
+            y, hs, cs = blocks.rglru_apply(p["rec"], apply_norm(p["ln1"], h),
+                                           cfg, return_state=True)
+            h = h + y
+            h = h + mlp(p["mlp"], apply_norm(p["ln2"], h), cfg.act)
+            return h, (hs, cs)
+        h, kc, vc = blocks.block_prefill(p, h, cfg, window=cfg.hybrid.window)
+        return h, (kc, vc)
+
+    def backbone_prefill(self, params, x, cache_len=None):
+        cfg = self.cfg
+
+        def f(h, p):
+            states = []
+            for i, kind in enumerate(cfg.hybrid.pattern):
+                h, st = self._prefill_layer(kind, p[f"l{i}"], h)
+                states.append(st)
+            return h, tuple(states)
+        h, period_states = jax.lax.scan(f, x, params["layers"]["periods"])
+        cache = {"periods": period_states, "rem": []}
+        rem_states = []
+        for i, kind in enumerate(self.rem):
+            h, st = self._prefill_layer(kind, params["layers"][f"rem{i}"], h)
+            rem_states.append(st)
+        cache["rem"] = tuple(rem_states)
+        return h, cache
+
+    # ---------------- decode ---------------- #
+    def _decode_layer(self, kind, p, h, state, pos):
+        cfg = self.cfg
+        if kind == "recurrent":
+            hs, cs = state
+            y, hs, cs = blocks.rglru_decode(p["rec"], apply_norm(p["ln1"], h),
+                                            hs, cs, cfg)
+            h = h + y
+            h = h + mlp(p["mlp"], apply_norm(p["ln2"], h), cfg.act)
+            return h, (hs, cs)
+        kc, vc = state
+        h, kc, vc = blocks.block_decode(p, h, kc, vc, pos, cfg,
+                                        window=cfg.hybrid.window)
+        return h, (kc, vc)
+
+    def backbone_decode(self, params, cache, x, pos):
+        cfg = self.cfg
+
+        def f(h, inp):
+            p, states = inp
+            new_states = []
+            for i, kind in enumerate(cfg.hybrid.pattern):
+                h, st = self._decode_layer(kind, p[f"l{i}"], h, states[i], pos)
+                new_states.append(st)
+            return h, tuple(new_states)
+        h, period_states = jax.lax.scan(
+            f, x, (params["layers"]["periods"], cache["periods"]))
+        rem_states = []
+        for i, kind in enumerate(self.rem):
+            h, st = self._decode_layer(kind, params["layers"][f"rem{i}"], h,
+                                       cache["rem"][i], pos)
+            rem_states.append(st)
+        return h, {"periods": period_states, "rem": tuple(rem_states)}
+
+    # ---------------- specs ---------------- #
+    def cache_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        w = cfg.hybrid.lru_width or cfg.d_model
+        cw = cfg.hybrid.conv_width
+        Sc = min(seq, cfg.hybrid.window)
+        P = self.n_periods
+
+        def rec_state(lead):
+            return (jax.ShapeDtypeStruct(lead + (batch, w), jnp.float32),
+                    jax.ShapeDtypeStruct(lead + (batch, cw - 1, w), cfg.jdtype))
+
+        def attn_state(lead):
+            shp = lead + (batch, cfg.groups, Sc, cfg.hd)
+            return (jax.ShapeDtypeStruct(shp, cfg.jdtype),
+                    jax.ShapeDtypeStruct(shp, cfg.jdtype))
+
+        period = tuple(
+            rec_state((P,)) if kind == "recurrent" else attn_state((P,))
+            for kind in cfg.hybrid.pattern)
+        rem = tuple(
+            rec_state(()) if kind == "recurrent" else attn_state(())
+            for kind in self.rem)
+        return {"periods": period, "rem": rem}
+
+    def supports_long_context(self) -> bool:
+        return True

@@ -1,0 +1,117 @@
+"""Shared transformer building blocks (pure functions over param pytrees).
+
+Params are plain dicts of jnp arrays. Every ``init_*`` returns a dict;
+every ``apply`` function takes (params, inputs) -> outputs. Stacked-layer
+params (leading ``L`` axis) are produced by ``jax.vmap`` over the init key,
+and consumed by ``jax.lax.scan`` in the model modules.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False) -> Params:
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d_in, jnp.float32))
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    # preferred_element_type = input dtype: the matmul emits its own dtype
+    # per shard, so Megatron-style partial-sum all-reduces move bf16, not
+    # the f32 the partitioner would otherwise hoist above the downcast
+    # (EXPERIMENTS.md §Perf dense iteration: ~2x collective traffic).
+    w = p["w"]
+    y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                            preferred_element_type=x.dtype)
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def norm_init(d: int, dtype, kind: str = "rmsnorm") -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------- #
+def mlp_init(key, d: int, ff: int, dtype, act: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, ff, dtype),
+         "down": dense_init(ks[1], ff, d, dtype)}
+    if act == "swiglu":
+        p["gate"] = dense_init(ks[2], d, ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str = "swiglu") -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    else:
+        h = jax.nn.gelu(dense(p["up"], x))
+    return dense(p["down"], h)
+
+
+# --------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------- #
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def _rope_rotate(x: jnp.ndarray, pos: jnp.ndarray, theta: float,
+                 head_axes: int) -> jnp.ndarray:
+    """Rotate the trailing hd axis of x by position-dependent angles.
+
+    x:   (B, S, <head_axes dims>, hd)
+    pos: (S,) or (B, S)
+    """
+    freqs = rope_freqs(x.shape[-1], theta)                 # (hd/2,)
+    p = pos if pos.ndim == 2 else pos[None, :]             # (B|1, S)
+    ang = p[..., None].astype(jnp.float32) * freqs          # (B|1, S, hd/2)
+    ang = ang.reshape(ang.shape[:2] + (1,) * head_axes + ang.shape[-1:])
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o = jnp.stack([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return o.reshape(x.shape).astype(x.dtype)
+
+
+def rope_qk(q: jnp.ndarray, k: jnp.ndarray, q_pos: jnp.ndarray,
+            k_pos: jnp.ndarray, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """q: (B, Sq, G, H, hd); k: (B, Sk, G, hd)."""
+    return (_rope_rotate(q, q_pos, theta, head_axes=2),
+            _rope_rotate(k, k_pos, theta, head_axes=1))
+
+
+def stacked_init(init_fn, key, n: int):
+    """vmap an init over a split key -> params with leading (n,) axis."""
+    return jax.vmap(init_fn)(jax.random.split(key, n))

@@ -1,0 +1,204 @@
+"""Shared LM scaffolding: embedding, scan-over-layers, loss, decode plumbing.
+
+All models expose the same surface (used by launch/dryrun, tests, examples):
+
+    model.init(key)                       -> params pytree
+    model.loss(params, batch)             -> (scalar loss, metrics dict)
+    model.prefill(params, batch)          -> (last_logits, cache)
+    model.decode_step(params, cache, token, pos) -> (logits, cache)
+    model.batch_spec(shape)               -> ShapeDtypeStruct pytree (inputs)
+    model.cache_spec(batch, seq)          -> ShapeDtypeStruct pytree
+
+Layers are stacked on a leading L axis and executed with ``jax.lax.scan``
+so compile time and HLO size are depth-independent (this is what makes an
+88-layer 123B dry-run compile on one CPU core). ``cfg.remat == "full"``
+wraps the scan body in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import apply_norm, norm_init
+
+Params = Dict[str, Any]
+
+
+def embed_init(key, n: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (n, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def xent(logits: jnp.ndarray, labels: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy with label -1 = ignore. logits (B,S,V), labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = jnp.sum((lse - ll) * mask) / n
+    acc = jnp.sum((jnp.argmax(lf, -1) == labels) * mask) / n
+    return loss, acc
+
+
+def maybe_remat(fn: Callable, cfg: ArchConfig) -> Callable:
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def scan_layers(stacked: Params, x: jnp.ndarray, body: Callable,
+                cfg: ArchConfig, with_aux: bool = False):
+    """body(layer_params, x) -> x  (or (x, aux) when with_aux)."""
+    if with_aux:
+        body_r = maybe_remat(body, cfg)
+
+        def f2(carry, p):
+            x, aux = carry
+            x, a = body_r(p, x)
+            return (x, aux + a), None
+        (x, aux), _ = jax.lax.scan(f2, (x, jnp.asarray(0.0, jnp.float32)), stacked)
+        return x, aux
+
+    body_r = maybe_remat(body, cfg)
+
+    def f(x, p):
+        return body_r(p, x), None
+    x, _ = jax.lax.scan(f, x, stacked)
+    return x
+
+
+def scan_prefill(stacked: Params, x: jnp.ndarray, body: Callable):
+    """body(p, x) -> (x, kc, vc); returns (x, (L,...) caches)."""
+    def f(x, p):
+        x, kc, vc = body(p, x)
+        return x, (kc, vc)
+    x, (kcs, vcs) = jax.lax.scan(f, x, stacked)
+    return x, kcs, vcs
+
+
+def scan_decode(stacked: Params, caches: Tuple, x: jnp.ndarray, body: Callable):
+    """body(p, per-layer cache leaves..., x) -> (x, new leaves...).
+    caches: tuple of arrays with leading L axis."""
+    def f(x, inp):
+        p = inp[0]
+        x, *new = body(p, x, *inp[1:])
+        return x, tuple(new)
+    x, new_caches = jax.lax.scan(f, x, (stacked,) + tuple(caches))
+    return x, new_caches
+
+
+def loop_decode_inplace(stacked: Params, caches: Tuple[jnp.ndarray, ...],
+                        x: jnp.ndarray, body: Callable):
+    """Decode over layers with IN-PLACE slot writes on stacked
+    (L, B, G, S, ...) caches.
+
+    scan_decode re-emits every layer's full cache as a stacked scan output
+    — a whole-cache copy per token, which made 32k-decode temp traffic ~4x
+    the cache size (§Perf qwen2 decode iteration). Here the caches are
+    loop-carried and each layer writes only its one new slot via
+    dynamic_update_slice, so a donated cache updates in place.
+
+    body(p_i, x, *caches, layer_idx) -> (x, *caches)
+    """
+    L = caches[0].shape[0]
+
+    def f(i, val):
+        x, cs = val
+        p_i = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            stacked)
+        x, *cs = body(p_i, x, *cs, i)
+        return (x, tuple(cs))
+
+    x, caches = jax.lax.fori_loop(0, L, f, (x, tuple(caches)))
+    return x, caches
+
+
+class BaseLM:
+    """Decoder-only scaffold shared by dense / moe / ssm / hybrid / vlm."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ---------------- params ---------------- #
+    def init_layers(self, key) -> Params:
+        raise NotImplementedError
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "embed": embed_init(k1, cfg.padded_vocab, cfg.d_model, cfg.jdtype),
+            "layers": self.init_layers(k2),
+            "ln_f": norm_init(cfg.d_model, cfg.jdtype, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = embed_init(k3, cfg.padded_vocab, cfg.d_model,
+                                      cfg.jdtype).T
+        return p
+
+    def logits(self, params: Params, h: jnp.ndarray) -> jnp.ndarray:
+        w = params["embed"].T if self.cfg.tie_embeddings else params["lm_head"]
+        return h @ w
+
+    # ---------------- forward hooks (family-specific) ---------------- #
+    def backbone(self, params, x):
+        """Full-sequence residual stream (train). Returns (h, aux)."""
+        raise NotImplementedError
+
+    def backbone_prefill(self, params, x, cache_len=None):
+        """Returns (h, cache). ``cache_len`` pads attention caches with
+        headroom for subsequent decode_step writes (serving allocates the
+        max length up front)."""
+        raise NotImplementedError
+
+    def backbone_decode(self, params, cache, x, pos):
+        """Returns (h (B,1,d), cache)."""
+        raise NotImplementedError
+
+    def embed_batch(self, params, batch) -> jnp.ndarray:
+        return params["embed"][batch["tokens"]]
+
+    # ---------------- public API ---------------- #
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]):
+        x = self.embed_batch(params, batch)
+        h, aux = self.backbone(params, x)
+        h = apply_norm(params["ln_f"], h)
+        logits = self.logits(params, h)
+        loss, acc = xent(logits, batch["labels"])
+        total = loss + 0.01 * aux
+        return total, {"ce": loss, "aux": aux, "acc": acc}
+
+    def prefill(self, params: Params, batch: Dict[str, jnp.ndarray],
+                cache_len: Optional[int] = None):
+        x = self.embed_batch(params, batch)
+        h, cache = self.backbone_prefill(params, x, cache_len)
+        h = apply_norm(params["ln_f"], h[:, -1:])
+        return self.logits(params, h), cache
+
+    def decode_step(self, params: Params, cache, token: jnp.ndarray,
+                    pos: jnp.ndarray):
+        x = params["embed"][token]                      # (B,1,d)
+        h, cache = self.backbone_decode(params, cache, x, pos)
+        h = apply_norm(params["ln_f"], h)
+        return self.logits(params, h), cache
+
+    # ---------------- specs (for dry-run lowering) ---------------- #
+    def batch_spec(self, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+
+    def cache_spec(self, batch: int, seq: int):
+        raise NotImplementedError
+
+    def supports_long_context(self) -> bool:
+        return False

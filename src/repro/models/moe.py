@@ -1,0 +1,55 @@
+"""Mixture-of-Experts decoder LM (olmoe-1b-7b, grok-1-314b)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ArchConfig
+from .layers import stacked_init
+from .lm import BaseLM, scan_decode, scan_layers, scan_prefill
+
+
+class MoELM(BaseLM):
+    def init_layers(self, key):
+        return stacked_init(lambda k: blocks.moe_block_init(k, self.cfg),
+                            key, self.cfg.n_layers)
+
+    def backbone(self, params, x):
+        def body(p, h):
+            return blocks.moe_block_apply(p, h, self.cfg)
+        h, aux = scan_layers(params["layers"], x, body, self.cfg, with_aux=True)
+        return h, aux / self.cfg.n_layers
+
+    def backbone_prefill(self, params, x, cache_len=None):
+        def body(p, h):
+            return blocks.moe_block_prefill(p, h, self.cfg)
+        h, kcs, vcs = scan_prefill(params["layers"], x, body)
+        if cache_len is not None:
+            pad = cache_len - kcs.shape[3]
+            if pad > 0:
+                widths = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
+                kcs, vcs = jnp.pad(kcs, widths), jnp.pad(vcs, widths)
+        return h, {"k": kcs, "v": vcs}
+
+    def backbone_decode(self, params, cache, x, pos):
+        from .lm import loop_decode_inplace
+        from .layers import apply_norm
+
+        def body(p, h, kc, vc, layer):
+            a, kc, vc = blocks.attn_decode_inplace(
+                p["attn"], apply_norm(p["ln1"], h), kc, vc, layer, pos,
+                self.cfg)
+            h = h + a
+            y, _ = blocks.moe_dispatch(p["moe"], apply_norm(p["ln2"], h),
+                                       self.cfg)
+            return h + y, kc, vc
+        h, (kcs, vcs) = loop_decode_inplace(
+            params["layers"], (cache["k"], cache["v"]), x, body)
+        return h, {"k": kcs, "v": vcs}
+
+    def cache_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        shp = (cfg.n_layers, batch, cfg.groups, seq, cfg.hd)
+        return {"k": jax.ShapeDtypeStruct(shp, cfg.jdtype),
+                "v": jax.ShapeDtypeStruct(shp, cfg.jdtype)}

@@ -1,0 +1,26 @@
+"""Runtime context the pure model functions can't carry in configs:
+the active mesh (for shard_map-based blocks). Set by the launcher
+(dryrun/train) around lowering; None on single-device CPU runs."""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_MESH: Optional[Mesh] = None
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev

@@ -1,0 +1,239 @@
+"""PartitionSpecs for the model zoo on the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+"pod" composes with "data" for batch sharding; "model" carries tensor /
+expert / channel parallelism.
+
+Strategy (baseline — §Perf iterates from here):
+  * embed (V, d)            -> shard d            (gather stays local)
+  * lm_head (d, V)          -> shard V            (vocab-sharded logits,
+                                local log-softmax + all-reduce)
+  * attn wq (d, Hp*hd)      -> shard out (= q-head parallel; Hp is padded
+                                so Hp*hd / model_axis is head-aligned)
+  * attn wk/wv (d, KV*hd)   -> shard out (KV*hd % 16 == 0 for all archs)
+  * attn wo (Hp*hd, d)      -> shard in  (row-parallel, one all-reduce)
+  * mlp up/gate             -> shard ff; down -> shard in (Megatron pair)
+  * MoE experts (E, d, ff)  -> expert-parallel over "model" when E % 16 == 0
+                               (olmoe 64e), else tensor-parallel inside each
+                               expert (grok 8e)
+  * mamba / RG-LRU          -> channel-parallel: every d_inner/lru_width
+                               dim over "model" (the scan is elementwise in
+                               channels => zero per-step collectives)
+  * KV / recurrent caches   -> batch over "data"(+"pod"), KV-slot axis
+                               (= cfg.groups, sized to the model axis) over
+                               "model"
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .config import ArchConfig
+
+MODEL_AXIS = "model"
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def batch_sharded(mesh: Mesh, global_batch: int) -> bool:
+    import numpy as np
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return global_batch % n == 0 and global_batch >= n
+
+
+def batch_pspec(mesh: Mesh, global_batch: int, ndim: int) -> P:
+    """P((pod,data), None, ...) when the batch divides the data axes, else
+    fully replicated (long_500k's batch=1)."""
+    if batch_sharded(mesh, global_batch):
+        return P(data_axes(mesh), *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+# --------------------------------------------------------------------- #
+# parameter shardings
+# --------------------------------------------------------------------- #
+def _expert_parallel(cfg: ArchConfig, axis_size: int) -> bool:
+    if cfg.moe is None:
+        return False
+    n_virtual = cfg.moe.n_experts * max(1, cfg.moe_ff_split or 1)
+    return n_virtual % axis_size == 0
+
+
+def param_pspec(cfg: ArchConfig, path: Tuple[str, ...], ndim: int,
+                axis_size: int) -> P:
+    """PartitionSpec for one param leaf, identified by its tree path."""
+    names = [p for p in path]
+    key = ".".join(names)
+    last = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    gp = names[-3] if len(names) >= 3 else ""
+
+    def spec(*axes):
+        """axes indexed from the right (negative positions)."""
+        out = [None] * ndim
+        for pos, ax in axes:
+            out[ndim + pos] = ax
+        return P(*out)
+
+    # ---- top-level tables ---- #
+    if last == "embed":
+        if cfg.family == "audio":
+            return spec((-2, MODEL_AXIS))        # vocab-sharded (tied head)
+        return spec((-1, MODEL_AXIS))            # d-sharded
+    if last == "lm_head":
+        return spec((-1, MODEL_AXIS))            # vocab-sharded logits
+    if last == "dec_pos":
+        return P(*([None] * ndim))
+
+    # ---- MoE experts ---- #
+    if parent in ("moe",) or (cfg.moe and last in ("router",)):
+        if last == "router":
+            return P(*([None] * ndim))
+    if cfg.moe and gp == "moe" or (cfg.moe and parent == "moe"):
+        pass
+    if cfg.moe and last in ("gate", "up", "down") and ndim >= 3 and parent == "moe":
+        # (L, E, d, ff) / (L, E, ff, d)
+        if _expert_parallel(cfg, axis_size):
+            return spec((-3, MODEL_AXIS))        # expert axis
+        if last == "down":
+            return spec((-2, MODEL_AXIS))        # ff (contracting) dim
+        return spec((-1, MODEL_AXIS))            # ff (output) dim
+
+    # ---- attention projections ---- #
+    if parent in ("wq", "wk", "wv") and last == "w":
+        return spec((-1, MODEL_AXIS))
+    if parent in ("wq", "wk", "wv") and last == "b":
+        return spec((-1, MODEL_AXIS))
+    if parent == "wo" and last == "w":
+        return spec((-2, MODEL_AXIS))
+    if parent == "wo" and last == "b":
+        return P(*([None] * ndim))
+
+    # ---- MLP ---- #
+    if parent in ("gate", "up") and last == "w":
+        return spec((-1, MODEL_AXIS))
+    if parent == "down" and last == "w":
+        return spec((-2, MODEL_AXIS))
+    if parent in ("gate", "up", "down") and last == "b":
+        return P(*([None] * ndim))
+
+    # ---- mamba ---- #
+    if parent == "in_proj" and last == "w":
+        return spec((-1, MODEL_AXIS))            # (L, d, 2*d_in)
+    if last == "conv_w":
+        return spec((-1, MODEL_AXIS))            # (L, cw, d_in|w)
+    if last == "conv_b":
+        return spec((-1, MODEL_AXIS))
+    if parent == "x_proj" and last == "w":
+        return spec((-2, MODEL_AXIS))            # (L, d_in, dtr+2s) contract
+    if parent == "dt_proj":
+        return spec((-1, MODEL_AXIS))            # (L, dtr, d_in) / bias
+    if last == "A_log":
+        return spec((-2, MODEL_AXIS))            # (L, d_in, st)
+    if last == "D":
+        return spec((-1, MODEL_AXIS))
+    if parent == "out_proj" and last == "w":
+        return spec((-2, MODEL_AXIS))            # (L, d_in, d)
+
+    # ---- RG-LRU ---- #
+    if parent in ("in_x", "in_gate") and last == "w":
+        return spec((-1, MODEL_AXIS))            # (P, d, w)
+    if parent in ("wa", "wx"):
+        # (P, w, w) gate matmuls contract the sharded channel dim; shard
+        # the output so gates stay channel-sharded (one all-gather of xc).
+        return spec((-1, MODEL_AXIS))
+    if last == "lam":
+        return spec((-1, MODEL_AXIS))
+    if parent == "out" and last == "w":
+        return spec((-2, MODEL_AXIS))            # (P, w, d)
+
+    # ---- norms, scalars, everything else ---- #
+    return P(*([None] * ndim))
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, params_tree) -> Any:
+    """NamedSharding pytree matching ``params_tree`` (arrays or SDS)."""
+    axis_size = mesh.shape[MODEL_AXIS]
+
+    def one(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        return NamedSharding(mesh, param_pspec(cfg, names, leaf.ndim, axis_size))
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "name"):
+        return str(k.name)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# --------------------------------------------------------------------- #
+# batch & cache shardings
+# --------------------------------------------------------------------- #
+def batch_shardings(mesh: Mesh, global_batch: int, batch_tree) -> Any:
+    def one(leaf):
+        return NamedSharding(mesh, batch_pspec(mesh, global_batch, leaf.ndim))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, global_batch: int,
+                    cache_tree) -> Any:
+    """Caches carry a leading L (or periods) axis, then batch.
+
+    Rule per leaf (by shape):
+      * axis 1 is batch -> data axes (if divisible)
+      * the KV-slot axis (size cfg.groups) or a channel axis divisible by
+        the model-axis size -> "model".
+    """
+    axis_size = mesh.shape[MODEL_AXIS]
+    dp = data_axes(mesh)
+    shard_batch = batch_sharded(mesh, global_batch)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        # find batch axis: first axis whose size == global_batch (skip axis 0
+        # which is the layer stack unless it equals the batch itself).
+        b_ax = None
+        for i, s in enumerate(leaf.shape):
+            if s == global_batch and i <= 1:
+                b_ax = i
+                break
+        if b_ax is not None and shard_batch and global_batch > 1:
+            spec[b_ax] = dp
+        # model axis: prefer the KV-slot axis (== groups), else the largest
+        # trailing channel axis divisible by axis_size.
+        m_ax = None
+        start = (b_ax + 1) if b_ax is not None else 1
+        for i in range(start, leaf.ndim):
+            if leaf.shape[i] == cfg.groups and cfg.groups % axis_size == 0:
+                m_ax = i
+                break
+        if m_ax is None:
+            best = -1
+            for i in range(start, leaf.ndim):
+                if leaf.shape[i] % axis_size == 0 and leaf.shape[i] > best:
+                    best = leaf.shape[i]
+                    m_ax = i
+            if best < axis_size:
+                m_ax = None
+        if m_ax is not None:
+            spec[m_ax] = MODEL_AXIS
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache_tree)
+
+
+def replicated(mesh: Mesh, tree) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

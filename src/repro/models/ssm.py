@@ -1,0 +1,62 @@
+"""Attention-free SSM LM — falcon-mamba-7b (mamba1 architecture).
+
+Each layer: x + mamba(rmsnorm(x)). No KV cache: decode state is
+(h (L,B,d_inner,d_state) fp32, conv (L,B,cw-1,d_inner)) — constant in
+sequence length, which is why this arch runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ArchConfig
+from .layers import norm_init, apply_norm, stacked_init
+from .lm import BaseLM, maybe_remat, scan_decode, scan_layers
+
+
+class MambaLM(BaseLM):
+    def init_layers(self, key):
+        def one(k):
+            return {"ln": norm_init(self.cfg.d_model, self.cfg.jdtype,
+                                    self.cfg.norm),
+                    "mamba": blocks.mamba_init(k, self.cfg)}
+        return stacked_init(one, key, self.cfg.n_layers)
+
+    def backbone(self, params, x):
+        def body(p, h):
+            return h + blocks.mamba_apply(p["mamba"], apply_norm(p["ln"], h),
+                                          self.cfg)
+        h = scan_layers(params["layers"], x, body, self.cfg)
+        return h, jnp.asarray(0.0, jnp.float32)
+
+    def backbone_prefill(self, params, x, cache_len=None):
+        def body(h, p):
+            y, hs, cs = blocks.mamba_prefill(p["mamba"], apply_norm(p["ln"], h),
+                                             self.cfg)
+            return h + y, (hs, cs)
+        body = maybe_remat(body, self.cfg)
+        h, (hs, cs) = jax.lax.scan(body, x, params["layers"])
+        return h, {"h": hs, "conv": cs}
+
+    def backbone_decode(self, params, cache, x, pos):
+        def body(p, h, hstate, cstate):
+            y, hstate, cstate = blocks.mamba_decode(
+                p["mamba"], apply_norm(p["ln"], h), hstate, cstate, self.cfg)
+            return h + y, hstate, cstate
+        h, (hs, cs) = scan_decode(params["layers"],
+                                  (cache["h"], cache["conv"]), x, body)
+        return h, {"h": hs, "conv": cs}
+
+    def cache_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        d_in = cfg.ssm.expand * cfg.d_model
+        return {
+            "h": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, d_in, cfg.ssm.d_state), jnp.float32),
+            "conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.ssm.d_conv - 1, d_in), cfg.jdtype),
+        }
+
+    def supports_long_context(self) -> bool:
+        return True

@@ -1,0 +1,74 @@
+"""Step factories: train / prefill / serve, plus their dry-run input specs.
+
+These are the functions the launcher jits. Shapes come from
+``repro.configs.shapes``; shardings from ``repro.models.sharding``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import adam
+from .config import ArchConfig
+from .lm import BaseLM
+
+Params = Dict[str, Any]
+
+
+def make_train_step(model: BaseLM, lr: float = 3e-4) -> Tuple[Callable, Any]:
+    """Returns (step, optimizer). step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+    optimizer = adam(lr)
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step, optimizer
+
+
+def make_prefill_step(model: BaseLM) -> Callable:
+    def step(params, batch):
+        return model.prefill(params, batch)
+    return step
+
+
+def make_serve_step(model: BaseLM) -> Callable:
+    """ONE new token against an existing cache (the decode_32k/long_500k
+    workload). Greedy-samples so the output is a token, not raw logits."""
+    def step(params, cache, token, pos):
+        logits, cache = model.decode_step(params, cache, token, pos)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token, cache
+    return step
+
+
+# --------------------------------------------------------------------- #
+# dry-run input specs (ShapeDtypeStruct stand-ins, zero allocation)
+# --------------------------------------------------------------------- #
+def train_specs(model: BaseLM, global_batch: int, seq: int):
+    """(params, opt_state, batch) as ShapeDtypeStructs."""
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    optimizer = adam(3e-4)
+    opt_state = jax.eval_shape(optimizer.init, params)
+    batch = model.batch_spec(global_batch, seq)
+    return params, opt_state, batch
+
+
+def prefill_specs(model: BaseLM, global_batch: int, seq: int):
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    return params, model.batch_spec(global_batch, seq)
+
+
+def serve_specs(model: BaseLM, global_batch: int, seq: int):
+    params = jax.eval_shape(model.init, jax.random.key(0))
+    cache = model.cache_spec(global_batch, seq)
+    token = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, cache, token, pos

@@ -1,0 +1,45 @@
+"""VLM — llava-next-34b language backbone with anyres tiling stub.
+
+The vision tower (SigLIP/CLIP ViT + projector) is a STUB per the
+assignment: ``batch["image_embeds"]`` carries (B, S_img, d_model)
+projected patch embeddings (anyres: base tile + 4 sub-tiles = 5 * 576 =
+2880 tokens). The language model consumes [image ; text] interleaved and
+the loss runs over text positions only — which is exactly how LLaVA-NeXT
+trains its LM stage.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .dense import DenseLM
+from .lm import xent
+from .layers import apply_norm
+
+
+class VLM(DenseLM):
+    def embed_batch(self, params, batch):
+        txt = params["embed"][batch["tokens"]]
+        img = batch["image_embeds"].astype(txt.dtype)
+        return jnp.concatenate([img, txt], axis=1)
+
+    def loss(self, params, batch):
+        x = self.embed_batch(params, batch)
+        h, aux = self.backbone(params, x)
+        h = apply_norm(params["ln_f"], h)
+        S_img = batch["image_embeds"].shape[1]
+        logits = self.logits(params, h[:, S_img:])      # text positions only
+        loss, acc = xent(logits, batch["labels"])
+        return loss, {"ce": loss, "aux": aux, "acc": acc}
+
+    def batch_spec(self, batch: int, seq: int):
+        cfg = self.cfg
+        s_img = min(cfg.n_frontend_tokens, max(seq // 2, 1))
+        s_txt = seq - s_img
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, s_txt), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, s_txt), jnp.int32),
+            "image_embeds": jax.ShapeDtypeStruct((batch, s_img, cfg.d_model),
+                                                 cfg.jdtype),
+        }

@@ -1,0 +1,54 @@
+"""Model registry: family -> class, arch-id -> (config, model)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from .config import ArchConfig
+from .dense import DenseLM
+from .encdec import EncDecModel
+from .hybrid import HybridLM
+from .lm import BaseLM
+from .moe import MoELM
+from .ssm import MambaLM
+from .vlm import VLM
+
+FAMILIES = {
+    "dense": DenseLM,
+    "moe": MoELM,
+    "ssm": MambaLM,
+    "hybrid": HybridLM,
+    "audio": EncDecModel,
+    "vlm": VLM,
+}
+
+ARCH_IDS = (
+    "llava_next_34b",
+    "falcon_mamba_7b",
+    "h2o_danube_1_8b",
+    "mistral_large_123b",
+    "whisper_base",
+    "olmoe_1b_7b",
+    "grok_1_314b",
+    "qwen2_72b",
+    "recurrentgemma_2b",
+    "internlm2_20b",
+)
+
+
+def normalize_arch_id(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str, reduced: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{normalize_arch_id(arch)}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def build(cfg: ArchConfig) -> BaseLM:
+    return FAMILIES[cfg.family](cfg)
+
+
+def get_model(arch: str, reduced: bool = False) -> Tuple[ArchConfig, BaseLM]:
+    cfg = get_config(arch, reduced)
+    return cfg, build(cfg)

@@ -1,0 +1,118 @@
+"""Minimal OBO flat-file parser / writer.
+
+Covers the subset of the OBO 1.4 format that GO and HP releases actually use
+for graph extraction: [Term] stanzas with id / name / namespace / is_a /
+relationship / is_obsolete. The updater treats the serialized file as the
+release artifact (checksummed byte-for-byte, like the paper's downloads).
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, List, Tuple, Union
+
+from .graph import KnowledgeGraph, TermMeta, Triple
+
+
+def parse_obo(text: str) -> KnowledgeGraph:
+    """Parse OBO text into a KnowledgeGraph.
+
+    Obsolete terms are kept in ``terms`` (so labels still resolve — the live
+    ontologies keep deprecated ids around) but contribute no triples.
+    """
+    triples: List[Triple] = []
+    terms: Dict[str, TermMeta] = {}
+
+    cur: Dict[str, Union[str, bool, List[Tuple[str, str]]]] = {}
+    in_term = False
+
+    def flush() -> None:
+        nonlocal cur
+        if not cur.get("id"):
+            cur = {}
+            return
+        ident = str(cur["id"])
+        meta = TermMeta(
+            identifier=ident,
+            label=str(cur.get("name", ident)),
+            namespace=str(cur.get("namespace", "")),
+            obsolete=bool(cur.get("is_obsolete", False)),
+            definition=str(cur.get("def", "")),
+        )
+        terms[ident] = meta
+        if not meta.obsolete:
+            for rel, target in cur.get("links", []):  # type: ignore[union-attr]
+                triples.append((ident, rel, target))
+        cur = {}
+
+    for raw in text.splitlines():
+        line = raw.strip()
+        if line.startswith("["):
+            flush()
+            in_term = line == "[Term]"
+            continue
+        if not in_term or not line or line.startswith("!"):
+            continue
+        if ":" not in line:
+            continue
+        key, _, value = line.partition(":")
+        key, value = key.strip(), value.split("!")[0].strip()
+        if key == "id":
+            cur["id"] = value
+        elif key == "name":
+            cur["name"] = value
+        elif key == "namespace":
+            cur["namespace"] = value
+        elif key == "def":
+            cur["def"] = value.strip('"')
+        elif key == "is_obsolete":
+            cur["is_obsolete"] = value.lower() == "true"
+        elif key == "is_a":
+            cur.setdefault("links", []).append(("is_a", value))  # type: ignore[union-attr]
+        elif key == "relationship":
+            parts = value.split()
+            if len(parts) >= 2:
+                cur.setdefault("links", []).append((parts[0], parts[1]))  # type: ignore[union-attr]
+    flush()
+
+    # Drop triples pointing at unknown targets (dangling imports in real OBO).
+    known = set(terms)
+    triples = [t for t in triples if t[2] in known]
+    kg = KnowledgeGraph.from_triples(triples, terms)
+    return kg
+
+
+def write_obo(kg: KnowledgeGraph, header_version: str) -> str:
+    """Serialize a KnowledgeGraph to OBO text (the 'release artifact')."""
+    lines = [
+        "format-version: 1.4",
+        f"data-version: {header_version}",
+        "ontology: repro-bio",
+        "",
+    ]
+    by_head: Dict[str, List[Tuple[str, str]]] = {}
+    for h, r, t in kg.string_triples():
+        by_head.setdefault(h, []).append((r, t))
+    for ident in sorted(kg.terms):
+        meta = kg.terms[ident]
+        lines.append("[Term]")
+        lines.append(f"id: {ident}")
+        lines.append(f"name: {meta.label}")
+        if meta.namespace:
+            lines.append(f"namespace: {meta.namespace}")
+        if meta.obsolete:
+            lines.append("is_obsolete: true")
+        for rel, target in sorted(by_head.get(ident, [])):
+            if rel == "is_a":
+                lines.append(f"is_a: {target}")
+            else:
+                lines.append(f"relationship: {rel} {target}")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def load_obo(path: Union[str, Path]) -> KnowledgeGraph:
+    return parse_obo(Path(path).read_text())
+
+
+def save_obo(kg: KnowledgeGraph, path: Union[str, Path], header_version: str) -> None:
+    Path(path).write_text(write_obo(kg, header_version))

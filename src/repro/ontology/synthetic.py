@@ -1,0 +1,185 @@
+"""Synthetic GO-like / HP-like ontology generators with version evolution.
+
+The container is offline, so the updater cannot download GO/HP releases.
+These generators produce ontologies with the structural statistics the paper
+relies on — scale-free ``is_a`` DAGs, GO's three namespaces with ``part_of``
+and ``regulates`` side relations, HP's pure-``is_a`` hierarchy — and an
+``evolve`` step that mimics a release cycle: new terms are added under
+existing ones, a small fraction are obsoleted, and some relationships are
+rewired ("reorganization of the relationship structure").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .graph import KnowledgeGraph, TermMeta, Triple
+
+GO_NAMESPACES = ("biological_process", "molecular_function", "cellular_component")
+
+# Vocabulary for plausible-looking labels (labels matter: the serving API
+# resolves them with case/whitespace normalization).
+_ADJ = [
+    "positive", "negative", "cellular", "nuclear", "mitochondrial", "membrane",
+    "cytoplasmic", "embryonic", "abnormal", "delayed", "progressive", "recurrent",
+    "proximal", "distal", "bilateral", "generalized", "focal", "chronic",
+]
+_NOUN = [
+    "regulation", "transport", "binding", "signaling", "development",
+    "morphogenesis", "differentiation", "metabolism", "biosynthesis",
+    "phosphorylation", "seizure", "hypotonia", "atrophy", "dysplasia",
+    "hypoplasia", "stenosis", "degeneration", "inflammation", "proliferation",
+]
+_OBJ = [
+    "pathway", "process", "activity", "complex", "response", "channel",
+    "receptor", "muscle", "cortex", "retina", "femur", "aorta", "kidney",
+    "neuron", "axon", "synapse", "epithelium", "cartilage", "marrow",
+]
+
+
+def _label(rng: np.random.Generator) -> str:
+    return (
+        f"{_ADJ[rng.integers(len(_ADJ))]} {_NOUN[rng.integers(len(_NOUN))]}"
+        f" of {_OBJ[rng.integers(len(_OBJ))]}"
+    )
+
+
+@dataclasses.dataclass
+class OntologySpec:
+    """Generator knobs for one ontology family."""
+
+    prefix: str                      # "GO" or "HP"
+    n_terms: int
+    namespaces: Tuple[str, ...]      # GO: 3 roots; HP: 1
+    side_relations: Tuple[str, ...]  # GO: (part_of, regulates); HP: ()
+    side_rel_frac: float             # fraction of terms with an extra side edge
+    multi_parent_frac: float         # fraction with a second is_a parent
+    pref_attach: float               # preferential-attachment strength
+
+
+GO_SPEC = OntologySpec(
+    prefix="GO", n_terms=4000, namespaces=GO_NAMESPACES,
+    side_relations=("part_of", "regulates"), side_rel_frac=0.25,
+    multi_parent_frac=0.3, pref_attach=0.75,
+)
+HP_SPEC = OntologySpec(
+    prefix="HP", n_terms=1800, namespaces=("human_phenotype",),
+    side_relations=(), side_rel_frac=0.0,
+    multi_parent_frac=0.25, pref_attach=0.75,
+)
+
+
+def generate(spec: OntologySpec, seed: int = 0, n_terms: Optional[int] = None) -> KnowledgeGraph:
+    """Generate one ontology version.
+
+    Parents are always lower-indexed → the is_a graph is a DAG by
+    construction, like GO/HP.
+    """
+    rng = np.random.default_rng(seed)
+    n = int(n_terms or spec.n_terms)
+    n_roots = len(spec.namespaces)
+    assert n > n_roots
+
+    ids = [f"{spec.prefix}:{i:07d}" for i in range(n)]
+    ns_of = np.empty(n, dtype=np.int64)
+    ns_of[:n_roots] = np.arange(n_roots)
+
+    terms: Dict[str, TermMeta] = {}
+    triples: List[Triple] = []
+    # child counts drive preferential attachment (GO's hub terms).
+    weight = np.zeros(n, dtype=np.float64)
+    weight[:n_roots] = 1.0
+
+    for i in range(n_roots):
+        terms[ids[i]] = TermMeta(ids[i], f"{spec.namespaces[i].replace('_', ' ')}", spec.namespaces[i])
+
+    for i in range(n_roots, n):
+        # pick a namespace, then a parent inside it with pref. attachment
+        ns = int(rng.integers(n_roots))
+        cand = np.nonzero(ns_of[:i] == ns)[0]
+        w = weight[cand] ** spec.pref_attach
+        parent = int(cand[rng.choice(len(cand), p=w / w.sum())])
+        ns_of[i] = ns
+        terms[ids[i]] = TermMeta(ids[i], _label(rng), spec.namespaces[ns])
+        triples.append((ids[i], "is_a", ids[parent]))
+        weight[parent] += 1.0
+        weight[i] = 1.0
+        if i > n_roots + 2 and rng.random() < spec.multi_parent_frac:
+            p2 = int(cand[rng.choice(len(cand), p=w / w.sum())])
+            if p2 != parent:
+                triples.append((ids[i], "is_a", ids[p2]))
+        if spec.side_relations and rng.random() < spec.side_rel_frac:
+            rel = spec.side_relations[int(rng.integers(len(spec.side_relations)))]
+            tgt = int(rng.integers(i))  # side edges may cross namespaces
+            triples.append((ids[i], rel, ids[tgt]))
+
+    return KnowledgeGraph.from_triples(triples, terms)
+
+
+def evolve(
+    kg: KnowledgeGraph,
+    spec: OntologySpec,
+    seed: int,
+    add_frac: float = 0.04,
+    obsolete_frac: float = 0.01,
+    rewire_frac: float = 0.02,
+) -> KnowledgeGraph:
+    """Produce the next release: add terms, obsolete some, rewire edges."""
+    rng = np.random.default_rng(seed)
+    terms = dict(kg.terms)
+    triples = kg.string_triples()
+
+    # --- obsolete leaf-ish terms (never roots) -------------------------- #
+    heads = {h for h, _, _ in triples}
+    tails = {t for _, _, t in triples}
+    leaves = [i for i in terms if i in heads and i not in tails and not terms[i].obsolete]
+    n_obs = int(len(terms) * obsolete_frac)
+    for ident in list(rng.permutation(leaves))[:n_obs]:
+        meta = terms[ident]
+        terms[ident] = TermMeta(meta.identifier, f"obsolete {meta.label}", meta.namespace, True)
+        triples = [t for t in triples if t[0] != ident and t[2] != ident]
+
+    # --- rewire a fraction of is_a edges -------------------------------- #
+    live = [i for i in terms if not terms[i].obsolete]
+    ns_map = {i: terms[i].namespace for i in live}
+    new_triples: List[Triple] = []
+    for h, r, t in triples:
+        if r == "is_a" and rng.random() < rewire_frac:
+            same_ns = [c for c in live if ns_map[c] == ns_map.get(h) and c != h]
+            if same_ns:
+                t = same_ns[int(rng.integers(len(same_ns)))]
+        new_triples.append((h, r, t))
+    triples = new_triples
+
+    # --- add new terms under random live parents ------------------------ #
+    n_add = int(len(terms) * add_frac)
+    next_idx = 1 + max(int(i.split(":")[1]) for i in terms)
+    for k in range(n_add):
+        ident = f"{spec.prefix}:{next_idx + k:07d}"
+        parent = live[int(rng.integers(len(live)))]
+        ns = terms[parent].namespace
+        terms[ident] = TermMeta(ident, _label(rng), ns)
+        triples.append((ident, "is_a", parent))
+        if spec.side_relations and rng.random() < spec.side_rel_frac:
+            rel = spec.side_relations[int(rng.integers(len(spec.side_relations)))]
+            triples.append((ident, rel, live[int(rng.integers(len(live)))]))
+
+    return KnowledgeGraph.from_triples(triples, terms)
+
+
+def release_series(
+    spec: OntologySpec, n_versions: int, seed: int = 0, n_terms: Optional[int] = None
+) -> List[Tuple[str, KnowledgeGraph]]:
+    """A dated series of releases, like GO's monthly channel."""
+    out: List[Tuple[str, KnowledgeGraph]] = []
+    kg = generate(spec, seed=seed, n_terms=n_terms)
+    for v in range(n_versions):
+        # paper: first version 2023, subsequent releases ~every six months
+        year, month = 2023 + (v // 2), 1 + 6 * (v % 2)
+        tag = f"{year}-{month:02d}-01"
+        out.append((tag, kg))
+        if v + 1 < n_versions:
+            kg = evolve(kg, spec, seed=seed + 1000 + v)
+    return out

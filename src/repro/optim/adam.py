@@ -1,0 +1,83 @@
+"""Minimal optimizer library (pytree transforms, optax-style but local)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], Tuple[Any, OptState]]
+
+
+def adam(lr: float | Callable[[jnp.ndarray], jnp.ndarray] = 1e-3,
+         b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam / AdamW. ``lr`` may be a float or a schedule fn(step)->lr."""
+
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        mu_hat = jax.tree.map(lambda m: m / (1 - b1 ** step), mu)
+        nu_hat = jax.tree.map(lambda v: v / (1 - b2 ** step), nu)
+        def upd(p, m, v):
+            d = m / (jnp.sqrt(v) + eps)
+            if weight_decay:
+                d = d + weight_decay * p
+            return p - lr_t * d
+        new_params = jax.tree.map(upd, params, mu_hat, nu_hat)
+        return new_params, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr: float = 0.5, eps: float = 1e-10) -> Optimizer:
+    """Adagrad — the classic choice for sparse embedding training."""
+
+    def init(params):
+        acc = jax.tree.map(jnp.zeros_like, params)
+        return OptState(jnp.zeros((), jnp.int32), acc, acc)
+
+    def update(grads, state, params):
+        acc = jax.tree.map(lambda a, g: a + g * g, state.mu, grads)
+        new_params = jax.tree.map(
+            lambda p, g, a: p - lr * g / (jnp.sqrt(a) + eps), params, grads, acc
+        )
+        return new_params, OptState(state.step + 1, acc, acc)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float = 0.01, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return OptState(jnp.zeros((), jnp.int32), zeros, zeros)
+
+    def update(grads, state, params):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        else:
+            mu = grads
+        new_params = jax.tree.map(lambda p, g: p - lr * g, params, mu)
+        return new_params, OptState(state.step + 1, mu, state.nu)
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"adam": adam, "adagrad": adagrad, "sgd": sgd}

@@ -1,0 +1,28 @@
+"""LR schedules as step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def inverse_sqrt(peak_lr: float, warmup_steps: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        decay = peak_lr * jnp.sqrt(warmup_steps / jnp.maximum(step, warmup_steps))
+        return jnp.where(step < warmup_steps, warm, decay)
+    return fn

@@ -1,0 +1,32 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests see the single real CPU device (the dry-run sets its own flags in a
+# separate process). Keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# make `import benchmarks.roofline` work regardless of invocation dir
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_go():
+    from repro.ontology.synthetic import GO_SPEC, generate
+    return generate(GO_SPEC, seed=7, n_terms=120)
+
+
+@pytest.fixture(scope="session")
+def tiny_hp():
+    from repro.ontology.synthetic import HP_SPEC, generate
+    return generate(HP_SPEC, seed=7, n_terms=80)
+
+
+@pytest.fixture()
+def registry(tmp_path):
+    from repro.core.registry import EmbeddingRegistry
+    return EmbeddingRegistry(tmp_path / "registry")

@@ -1,0 +1,180 @@
+"""The paper's system: update pipeline, registry, the three API endpoints,
+request batching, PROV metadata."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.provenance import prov_record, validate_prov
+from repro.core.registry import EmbeddingRegistry
+from repro.core.serving import RequestBatcher, ServingEngine, TopKRequest
+from repro.core.updater import (FileReleaseChannel, Updater, poll_loop)
+from repro.kge.train import TrainConfig
+from repro.ontology import obo
+from repro.ontology.synthetic import GO_SPEC, evolve, generate
+
+FAST = TrainConfig(batch_size=64, num_negs=4, lr=5e-2)
+TWO = ("transe", "distmult")
+
+
+class MemChannel:
+    def __init__(self, name, version, kg):
+        self.name, self._v, self._kg = name, version, kg
+
+    def latest(self):
+        return self._v, self._kg
+
+    def bump(self, version, kg):
+        self._v, self._kg = version, kg
+
+
+@pytest.fixture()
+def served(registry, tiny_go):
+    """Registry with one published version + engine."""
+    upd = Updater(registry, models=TWO, dim=16, train_cfg=FAST,
+                  steps_override=40)
+    ch = MemChannel("go", "2023-01-01", tiny_go)
+    rep = upd.run_once(ch)
+    assert rep.changed and rep.trained_models == list(TWO)
+    return registry, ServingEngine(registry), ch, upd
+
+
+# ------------------------- updater semantics ------------------------- #
+def test_unchanged_release_is_not_retrained(served):
+    registry, engine, ch, upd = served
+    rep2 = upd.run_once(ch)
+    assert not rep2.changed and rep2.trained_models == []
+
+
+def test_new_release_triggers_retrain_and_invalidation(served, tiny_go):
+    registry, engine, ch, upd = served
+    # warm the engine cache, then release a new version
+    engine.similarity("go", "transe", tiny_go.entities[0], tiny_go.entities[1])
+    assert len(engine._cache) == 1
+    upd.engine = engine
+    kg2 = evolve(tiny_go, GO_SPEC, seed=3)
+    ch.bump("2023-07-01", kg2)
+    rep = upd.run_once(ch)
+    assert rep.changed
+    assert engine._cache == {}                       # invalidated
+    assert registry.versions("go") == ["2023-01-01", "2023-07-01"]
+    # endpoints now serve the NEW version's entity set
+    new_ent = [e for e in kg2.entities if e not in set(tiny_go.entities)][0]
+    s = engine.similarity("go", "transe", new_ent, kg2.entities[0])
+    assert -1.001 <= s <= 1.001
+
+
+def test_file_release_channel(tmp_path, tiny_go):
+    d = tmp_path / "releases"
+    d.mkdir()
+    obo.save_obo(tiny_go, d / "2023-01-01.obo", header_version="2023-01-01")
+    kg2 = evolve(tiny_go, GO_SPEC, seed=1)
+    obo.save_obo(kg2, d / "2023-07-01.obo", header_version="2023-07-01")
+    ch = FileReleaseChannel("go", d)
+    v, kg = ch.latest()
+    assert v == "2023-07-01"
+    assert kg.checksum() == kg2.checksum()
+
+
+def test_poll_loop_runs_all_channels(registry, tiny_go, tiny_hp):
+    upd = Updater(registry, models=("transe",), dim=8, train_cfg=FAST,
+                  steps_override=10)
+    chans = [MemChannel("go", "v1", tiny_go), MemChannel("hp", "v1", tiny_hp)]
+    reports = poll_loop(upd, chans, iterations=2)
+    assert len(reports) == 4
+    assert reports[0].changed and reports[1].changed
+    assert not reports[2].changed and not reports[3].changed
+
+
+# ------------------------- the three endpoints ------------------------- #
+def test_download_endpoint_payload(served):
+    registry, engine, ch, _ = served
+    payload = json.loads(engine.download("go", "transe"))
+    assert len(payload) == 120
+    vecs = list(payload.values())
+    assert all(len(v) == 16 for v in vecs)
+    # versioned download: explicit version works too
+    payload_v = json.loads(engine.download("go", "transe", "2023-01-01"))
+    assert payload == payload_v
+
+
+def test_similarity_endpoint(served, tiny_go):
+    registry, engine, ch, _ = served
+    a, b = tiny_go.entities[0], tiny_go.entities[1]
+    s_ab = engine.similarity("go", "transe", a, b)
+    s_ba = engine.similarity("go", "transe", b, a)
+    assert abs(s_ab - s_ba) < 1e-6                    # symmetric
+    assert abs(engine.similarity("go", "transe", a, a) - 1.0) < 1e-5
+    assert -1.001 <= s_ab <= 1.001
+
+
+def test_similarity_accepts_labels_with_normalization(served, tiny_go):
+    registry, engine, ch, _ = served
+    ident = tiny_go.entities[5]
+    label = tiny_go.terms[ident].label
+    messy = "  " + label.upper().replace(" ", "   ") + " "
+    s1 = engine.similarity("go", "transe", ident, tiny_go.entities[6])
+    s2 = engine.similarity("go", "transe", messy, tiny_go.entities[6])
+    assert s1 == s2
+
+
+def test_unknown_class_raises(served):
+    _, engine, _, _ = served
+    with pytest.raises(KeyError):
+        engine.similarity("go", "transe", "GO:9999999", "GO:0000001")
+
+
+def test_closest_concepts_endpoint(served, tiny_go):
+    registry, engine, ch, _ = served
+    q = tiny_go.entities[3]
+    res = engine.closest_concepts("go", "transe", q, k=10)
+    assert len(res) == 10
+    scores = [c.score for c in res]
+    assert scores == sorted(scores, reverse=True)     # ranked
+    assert all(c.identifier != q for c in res)        # self excluded
+    assert all(c.url.endswith(c.identifier) for c in res)
+    assert all(isinstance(c.label, str) and c.label for c in res)
+
+
+def test_batcher_matches_individual_queries(served, tiny_go):
+    registry, engine, ch, _ = served
+    batcher = RequestBatcher(engine, max_batch=8)
+    queries = tiny_go.entities[:20]
+    tickets = [batcher.submit(TopKRequest("go", "transe", q, 5))
+               for q in queries]
+    batched = batcher.flush()
+    for t, q in zip(tickets, queries):
+        solo = engine.closest_concepts("go", "transe", q, k=5)
+        got = batched[t]
+        assert [c.identifier for c in got] == [c.identifier for c in solo]
+
+
+# ------------------------- registry / PROV ------------------------- #
+def test_prov_roundtrip_and_validation(served):
+    registry, _, _, _ = served
+    ids, labels, emb, meta = registry.get("go", "transe")
+    assert validate_prov(meta["prov"])
+    blob = json.dumps(meta["prov"])
+    # PROV must record the input ontology, the model and the hypers
+    assert "transe" in blob and "go" in blob
+    assert meta["ontology_checksum"] in blob
+    assert meta["dim"] == 16 and meta["num_entities"] == len(ids)
+
+
+def test_prov_validation_rejects_garbage():
+    assert not validate_prov({})
+    assert not validate_prov({"wasGeneratedBy": {}})
+
+
+def test_registry_latest_version_ordering(registry, tiny_go):
+    upd = Updater(registry, models=("transe",), dim=8, train_cfg=FAST,
+                  steps_override=5)
+    ch = MemChannel("go", "2023-01-01", tiny_go)
+    upd.run_once(ch)
+    ch.bump("2024-01-01", evolve(tiny_go, GO_SPEC, seed=2))
+    upd.run_once(ch)
+    assert registry.store.latest_version("go") == "2024-01-01"
+    # engine serves the most up-to-date version by default (paper semantics)
+    engine = ServingEngine(registry)
+    idx = engine._index("go", "transe")
+    assert len(idx.entity_ids) > 120

@@ -1,0 +1,70 @@
+"""int8 KV cache (serving feature): quantization round-trip + decode
+consistency within quantization tolerance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import blocks, build, get_config
+
+
+def test_quantize_roundtrip():
+    x = jax.random.normal(jax.random.key(0), (3, 4, 7, 32), jnp.float32) * 5
+    q, s = blocks.quantize_kv(x)
+    assert q.dtype == jnp.int8 and s.shape == (3, 4, 7)
+    x2 = blocks.dequantize_kv(q, s, jnp.float32)
+    # symmetric int8: relative error <= 1/254 of the row max
+    err = np.abs(np.asarray(x2 - x))
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=-1))[..., None] / 127.0
+    assert (err <= bound + 1e-6).all()
+
+
+def test_quantize_handles_zero_rows():
+    x = jnp.zeros((2, 5, 8))
+    q, s = blocks.quantize_kv(x)
+    assert np.asarray(blocks.dequantize_kv(q, s, jnp.float32)).sum() == 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2_72b", "h2o_danube_1_8b"])
+def test_int8_decode_close_to_fp(arch):
+    """prefill+decode with int8 cache tracks the fp cache within
+    quantization noise (and exactly matches shapes/structure)."""
+    cfg = get_config(arch, reduced=True).with_(dtype="float32")
+    model_fp = build(cfg)
+    model_q8 = build(cfg.with_(kv_cache_dtype="int8"))
+    params = model_fp.init(jax.random.key(0))
+    B, S = 2, 48
+    key = jax.random.key(1)
+    batch = {
+        "tokens": jax.random.randint(key, (B, S - 1), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(key, (B, S - 1), 0, cfg.vocab, jnp.int32),
+    }
+    tok = jax.random.randint(jax.random.key(2), (B, 1), 0, cfg.vocab, jnp.int32)
+    pos = jnp.asarray(S - 1, jnp.int32)
+
+    _, cache_fp = jax.jit(lambda p, b: model_fp.prefill(p, b, cache_len=S))(
+        params, batch)
+    logits_fp, _ = jax.jit(model_fp.decode_step)(params, cache_fp, tok, pos)
+
+    _, cache_q8 = jax.jit(lambda p, b: model_q8.prefill(p, b, cache_len=S))(
+        params, batch)
+    assert cache_q8["k"].dtype == jnp.int8
+    assert "k_scale" in cache_q8
+    logits_q8, cache_q8b = jax.jit(model_q8.decode_step)(params, cache_q8,
+                                                         tok, pos)
+    assert cache_q8b["k"].dtype == jnp.int8
+
+    lf = np.asarray(logits_fp, np.float32)
+    lq = np.asarray(logits_q8, np.float32)
+    # quantization-level agreement, and identical top-1 predictions
+    np.testing.assert_allclose(lq, lf, rtol=0.1, atol=0.15)
+    np.testing.assert_array_equal(lq.argmax(-1), lf.argmax(-1))
+
+
+def test_int8_cache_spec_half_the_bytes():
+    cfg = get_config("qwen2_72b").with_(kv_groups=16)
+    fp = build(cfg).cache_spec(128, 32768)
+    q8 = build(cfg.with_(kv_cache_dtype="int8")).cache_spec(128, 32768)
+    size = lambda t: sum(np.prod(l.shape) * l.dtype.itemsize
+                         for l in jax.tree.leaves(t))
+    assert size(q8) < 0.6 * size(fp)

