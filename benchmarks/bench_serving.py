@@ -1,0 +1,153 @@
+"""Serving-throughput benchmark: per-request top_k vs the BatchScheduler.
+
+Measures queries/sec and p50 per-query latency for each power-of-two batch
+bucket (the scheduler's padding buckets), on the ref path and optionally
+the Pallas path (interpret mode on CPU — a correctness proxy; compiled
+numbers need a TPU). Emits ``benchmarks/results/BENCH_serving.json`` so
+later PRs have a perf trajectory to beat.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_serving [--fast] [--pallas]
+
+Acceptance floor (PR 1): scheduler >= 2x solo queries/sec at batch 32 on
+the ref path.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+RESULTS = REPO / "benchmarks" / "results"
+BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def run(fast: bool = False, use_pallas: bool = False,
+        buckets=BUCKETS, repeats: int | None = None) -> dict:
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
+
+    n = 2_000 if fast else 20_000          # paper: GO > 40k classes
+    if use_pallas:
+        n = min(n, 2_048)                  # interpret mode is slow on CPU
+    d, k = 200, 10
+    repeats = repeats or (2 if use_pallas else 8)
+    rng = np.random.default_rng(0)
+
+    with tempfile.TemporaryDirectory() as td:
+        registry = EmbeddingRegistry(td)
+        ids = [f"GO:{i:07d}" for i in range(n)]
+        labels = [f"synthetic term {i}" for i in range(n)]
+        emb = rng.standard_normal((n, d)).astype(np.float32)
+        registry.publish("go", "2025-01", "transe", ids, labels, emb,
+                         ontology_checksum="bench", hyperparameters={"dim": d})
+        engine = ServingEngine(registry, use_pallas=use_pallas)
+        engine.closest_concepts("go", "transe", ids[0], k=k)   # build index
+
+        out = {"n_classes": n, "dim": d, "k": k,
+               "path": "pallas-interpret" if use_pallas else "ref",
+               "repeats": repeats, "buckets": []}
+        sched = BatchScheduler(engine, max_batch=max(buckets))
+        for b in buckets:
+            queries = [ids[int(i)] for i in rng.integers(0, n, b)]
+            # warm both paths at this bucket shape (jit trace, caches)
+            for q in queries:
+                sched.submit(TopKRequest("go", "transe", q, k))
+            sched.flush()
+            engine.closest_concepts("go", "transe", queries[0], k=k)
+
+            solo_lat = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for q in queries:
+                    engine.closest_concepts("go", "transe", q, k=k)
+                solo_lat.append(time.perf_counter() - t0)
+            sched_lat = []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                for q in queries:
+                    sched.submit(TopKRequest("go", "transe", q, k))
+                res = sched.flush()
+                assert len(res) == b
+                sched_lat.append(time.perf_counter() - t0)
+
+            solo_best, sched_best = min(solo_lat), min(sched_lat)
+            row = {
+                "batch": b,
+                "solo_qps": round(b / solo_best, 1),
+                "sched_qps": round(b / sched_best, 1),
+                "speedup": round(solo_best / sched_best, 2),
+                "solo_p50_ms_per_query": round(
+                    float(np.percentile(solo_lat, 50)) / b * 1e3, 3),
+                "sched_p50_ms_per_query": round(
+                    float(np.percentile(sched_lat, 50)) / b * 1e3, 3),
+            }
+            out["buckets"].append(row)
+            print(f"  serving[{out['path']}] batch={b:3d}: "
+                  f"solo {row['solo_qps']:>9,.0f} q/s  "
+                  f"sched {row['sched_qps']:>9,.0f} q/s  "
+                  f"({row['speedup']:.2f}x, "
+                  f"p50 {row['sched_p50_ms_per_query']:.3f} ms/q)")
+        b32 = [r for r in out["buckets"] if r["batch"] == 32]
+        if b32:
+            out["speedup_batch32"] = b32[0]["speedup"]
+        return out
+
+
+def section_key(path: str, fast: bool) -> str:
+    """Fast (CI-sized) runs record under their own key so they never
+    overwrite a full-sized trajectory with smaller-n numbers."""
+    return f"{path}_fast" if fast else path
+
+
+def write_results(report: dict) -> Path:
+    """Merge ``report`` sections into BENCH_serving.json (a ref-only run
+    must not clobber a previously recorded pallas section, and vice versa)."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_serving.json"
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            merged = {}
+    merged.update(report)
+    out.write_text(json.dumps(merged, indent=2))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized table (2k classes instead of 20k)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="also run the Pallas path (interpret mode on CPU)")
+    args = ap.parse_args()
+
+    ref = run(fast=args.fast, use_pallas=False)
+    report = {section_key("ref", args.fast): ref}
+    if args.pallas:
+        report[section_key("pallas_interpret", args.fast)] = run(
+            fast=args.fast, use_pallas=True, buckets=(1, 8, 32))
+    out = write_results(report)
+    print(f"[bench_serving] wrote {out}")
+
+    s32 = ref.get("speedup_batch32", 0.0)
+    floor = 2.0
+    status = "PASS" if s32 >= floor else "FAIL"
+    print(f"[bench_serving] {status}: scheduler speedup at batch 32 on ref "
+          f"path = {s32:.2f}x (floor {floor}x)")
+    if s32 < floor:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

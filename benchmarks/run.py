@@ -13,6 +13,10 @@ corresponds to a system capability it claims:
                       across an evolving version series (paper §4 update
                       mechanism)
   B4 rdf2vec-walks    vectorized random-walk corpus rate (paper §3 RDF2Vec)
+  B5 serving-sched    BatchScheduler queries/sec + p50 latency per padding
+                      bucket vs per-request top_k (benchmarks/bench_serving.py);
+                      also written standalone to results/BENCH_serving.json
+                      so later PRs have a perf trajectory to beat
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--fast]
 Roofline tables come from the dry-run artifacts: see benchmarks/report.py.
@@ -206,7 +210,7 @@ def main():
     ap.add_argument("--fast", action="store_true",
                     help="CI-sized inputs (default full CPU-sized)")
     ap.add_argument("--only", default=None,
-                    choices=["kge", "serving", "update", "walks"])
+                    choices=["kge", "serving", "update", "walks", "sched"])
     args = ap.parse_args()
 
     RESULTS.mkdir(parents=True, exist_ok=True)
@@ -227,6 +231,13 @@ def main():
         if args.only in (None, "walks"):
             print("[B4] RDF2Vec walk corpus")
             report["walks"] = bench_walks(args.fast)
+        if args.only in (None, "sched"):
+            print("[B5] serving scheduler throughput")
+            from benchmarks.bench_serving import (run as bench_serving_run,
+                                                  section_key, write_results)
+            ref_report = bench_serving_run(fast=args.fast)
+            write_results({section_key("ref", args.fast): ref_report})
+            report["serving_scheduler"] = ref_report
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

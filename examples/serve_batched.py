@@ -3,9 +3,9 @@ platform and push a batched request workload through it.
 
 Trains snapshots for BOTH ontologies (GO-like and HP-like), then fires a
 mixed stream of 300 requests across (ontology, model, endpoint) and reports
-latency percentiles — single-query vs RequestBatcher (which groups
-concurrent top-k queries per (ontology, model) into one batched kernel
-call, the serving hot-spot optimization).
+latency percentiles — single-query vs BatchScheduler (which groups
+concurrent top-k queries into version-pinned micro-batches per
+(ontology, model, version, k), the serving hot-spot optimization).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -19,7 +19,7 @@ import numpy as np
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core.registry import EmbeddingRegistry
-from repro.core.serving import RequestBatcher, ServingEngine, TopKRequest
+from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
 from repro.core.updater import Updater
 from repro.kge.train import TrainConfig
 from repro.ontology.synthetic import GO_SPEC, HP_SPEC, generate
@@ -68,19 +68,22 @@ def main():
         lat = np.array(lat) * 1e3
 
         # batched path
-        batcher = RequestBatcher(engine, max_batch=64)
+        sched = BatchScheduler(engine, max_batch=64)
         t0 = time.perf_counter()
-        tickets = [batcher.submit(r) for r in reqs]
-        results = batcher.flush()
+        tickets = [sched.submit(r) for r in reqs]
+        results = sched.flush()
         t_batched = time.perf_counter() - t0
 
-        assert len(results) == len(reqs)
+        assert len(results) == len(reqs) and not sched.errors
         print(f"\n[serve] solo:    {t_solo:.2f}s total, "
               f"p50={np.percentile(lat, 50):.2f}ms "
               f"p99={np.percentile(lat, 99):.2f}ms")
         print(f"[serve] batched: {t_batched:.2f}s total "
-              f"({t_solo / t_batched:.1f}x) — groups per (ontology, model), "
-              f"one kernel call per group")
+              f"({t_solo / t_batched:.1f}x) — version-pinned micro-batches "
+              f"per (ontology, model, version, k): "
+              f"{sched.stats['batches']} kernel calls, "
+              f"{sched.stats['padded_queries']} pad queries")
+        print(f"[serve] index cache: {engine.cache_stats()}")
 
         sample = results[tickets[0]]
         r0 = reqs[0]

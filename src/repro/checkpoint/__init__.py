@@ -1,3 +1,3 @@
-from .store import SnapshotStore
+from .store import SnapshotStore, version_sort_key
 
-__all__ = ["SnapshotStore"]
+__all__ = ["SnapshotStore", "version_sort_key"]

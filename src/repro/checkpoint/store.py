@@ -7,10 +7,24 @@ Layout (mirrors the paper's Zenodo deposit structure):
 from __future__ import annotations
 
 import json
+import re
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
+
+_DIGIT_RUN = re.compile(r"(\d+)")
+
+
+def version_sort_key(version: str) -> tuple:
+    """Natural/date-aware version ordering key.
+
+    Digit runs compare numerically, so '2024-10' sorts after '2024-9' and
+    'v10' after 'v2' — plain lexicographic sort gets both wrong, which made
+    ``latest_version`` serve a stale release.
+    """
+    return tuple(int(part) if part.isdigit() else part
+                 for part in _DIGIT_RUN.split(version))
 
 
 class SnapshotStore:
@@ -51,7 +65,8 @@ class SnapshotStore:
         d = self.root / ontology
         if not d.exists():
             return []
-        return sorted(p.name for p in d.iterdir() if p.is_dir())
+        return sorted((p.name for p in d.iterdir() if p.is_dir()),
+                      key=version_sort_key)
 
     def models(self, ontology: str, version: str) -> List[str]:
         d = self.root / ontology / version

@@ -1,14 +1,14 @@
 # The paper's primary contribution: versioned KGE production + serving.
 from .provenance import prov_record, validate_prov
 from .registry import EmbeddingRegistry
-from .serving import (ClosestConcept, EmbeddingIndex, RequestBatcher,
-                      ServingEngine, TopKRequest)
+from .serving import (BatchScheduler, ClosestConcept, EmbeddingIndex,
+                      LRUIndexCache, ServingEngine, TopKRequest)
 from .updater import (PAPER_MODELS, FileReleaseChannel, ReleaseChannel,
                       UpdateReport, Updater, poll_loop)
 
 __all__ = [
     "prov_record", "validate_prov", "EmbeddingRegistry",
-    "ClosestConcept", "EmbeddingIndex", "RequestBatcher", "ServingEngine",
-    "TopKRequest", "PAPER_MODELS", "FileReleaseChannel", "ReleaseChannel",
-    "UpdateReport", "Updater", "poll_loop",
+    "BatchScheduler", "ClosestConcept", "EmbeddingIndex", "LRUIndexCache",
+    "ServingEngine", "TopKRequest", "PAPER_MODELS", "FileReleaseChannel",
+    "ReleaseChannel", "UpdateReport", "Updater", "poll_loop",
 ]

@@ -1,4 +1,4 @@
-"""The Bio-KGvec2go serving engine.
+"""The Bio-KGvec2go serving subsystem.
 
 Implements the paper's three API functionalities, in-process (the container
 has no network; the Flask layer in the paper is a thin shim over exactly
@@ -6,20 +6,42 @@ these calls):
 
   * ``download``      — JSON payload of all class vectors for a version;
   * ``similarity``    — cosine similarity between two classes (ids or labels,
-                        with case/whitespace normalization), from the most
-                        up-to-date version;
+                        with case/whitespace normalization);
   * ``closest_concepts`` — top-k most similar classes, ranked table with
                         identifier, label, score and exploration URL.
 
-Queries accept either class identifiers or textual labels. Top-k runs
-through the fused Pallas kernel (``repro.kernels.ops.topk_cosine``).
-A small request batcher groups concurrent top-k queries per (ontology,
-model) into one kernel call — the serving hot path the paper runs
-brute-force per request.
+Architecture (PR 1 hardening — see ROADMAP.md "Serving architecture"):
+
+  ``EmbeddingIndex``   one (ontology, version, model) table, query-ready.
+                       Top-k runs through the fused kernel dispatcher
+                       (``repro.kernels.ops.topk_cosine``) with per-query
+                       self-exclusion and k>N clamping *inside* the kernel —
+                       sentinel rows are never surfaced.
+
+  ``LRUIndexCache``    bounded LRU over built indices with hit/miss/eviction
+                       counters, so a long-lived server over many
+                       (ontology, model, version) combinations cannot OOM.
+
+  ``ServingEngine``    resolves queries against an atomic per-ontology
+                       *latest pointer*. Endpoints accept an optional
+                       ``version`` for pinned reads; the updater's
+                       ``invalidate`` swaps the pointer atomically, so
+                       in-flight queries pinned to the old version finish
+                       consistently while new queries see the new release.
+
+  ``BatchScheduler``   groups concurrent top-k requests into micro-batches
+                       per (ontology, model, version, k) with monotonically
+                       increasing ticket IDs (never reset, so outstanding
+                       tickets can't collide across flushes) and pads each
+                       micro-batch to a power-of-two bucket so the kernel
+                       retraces at most ~log2(max_batch) query shapes.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import threading
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -64,20 +86,30 @@ class EmbeddingIndex:
     """One (ontology, version, model) embedding table, ready to query."""
 
     def __init__(self, entity_ids: Sequence[str], labels: Sequence[str],
-                 embeddings: np.ndarray, url_prefix: str = "https://bio.kgvec2go.org/concept/"):
+                 embeddings: np.ndarray, url_prefix: str = "https://bio.kgvec2go.org/concept/",
+                 use_pallas: Optional[bool] = None):
         self.entity_ids = list(entity_ids)
         self.labels = list(labels)
         self.url_prefix = url_prefix
+        #: kernel backend: None = REPRO_USE_PALLAS env dispatch
+        self.use_pallas = use_pallas
         emb = np.asarray(embeddings, dtype=np.float32)
         norms = np.linalg.norm(emb, axis=1, keepdims=True)
         self.embeddings = emb
         self.unit = emb / np.maximum(norms, 1e-12)
+        # device-resident copy of the immutable table: converting (N, d)
+        # per top-k call would dominate the serving hot path at paper scale
+        self._unit_jnp = jnp.asarray(self.unit)
         self._id_to_row = {i: r for r, i in enumerate(self.entity_ids)}
         self._label_to_row: Dict[str, int] = {}
         for r, lbl in enumerate(self.labels):
             self._label_to_row.setdefault(_norm_label(lbl), r)
         #: sorted normalized labels for autocomplete (paper §6 future work)
         self._sorted_labels = sorted(self._label_to_row)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.embeddings.nbytes + self.unit.nbytes)
 
     # ------------------------------------------------------------------ #
     def autocomplete(self, prefix: str, limit: int = 10) -> List[str]:
@@ -145,65 +177,172 @@ class EmbeddingIndex:
             if r is None:
                 raise KeyError(f"unknown class {q!r}")
             rows.append(r)
-        qvec = self.unit[np.asarray(rows)]                      # (Q, d)
-        kk = k + 1 if exclude_self else k
+        return self.top_k_rows(rows, k, exclude_self=exclude_self)
+
+    def top_k_rows(self, rows: Sequence[int], k: int = 10,
+                   exclude_self: bool = True) -> List[List[ClosestConcept]]:
+        """Top-k for already-resolved table rows.
+
+        Self-exclusion and k>N clamping happen inside the kernel (per-query
+        exclude operand + valid-count output), so results contain exactly
+        ``min(k, N - exclude_self)`` real entries — no sentinel rows, no
+        over-fetch-then-filter.
+        """
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        rows = np.asarray(list(rows), dtype=np.int32)
+        qvec = self.unit[rows]                                  # (Q, d)
+        excl = rows if exclude_self else np.full(len(rows), -1, np.int32)
         from ..kernels import ops as kops
-        scores, idx = kops.topk_cosine(jnp.asarray(qvec), jnp.asarray(self.unit), kk)
-        scores, idx = np.asarray(scores), np.asarray(idx)
+        scores, idx, valid = kops.topk_cosine(
+            jnp.asarray(qvec), self._unit_jnp, int(k),
+            exclude_rows=jnp.asarray(excl), use_pallas=self.use_pallas)
+        scores, idx, valid = np.asarray(scores), np.asarray(idx), np.asarray(valid)
         out: List[List[ClosestConcept]] = []
-        for qi, row in enumerate(rows):
+        for qi in range(len(rows)):
             lst: List[ClosestConcept] = []
-            for score, j in zip(scores[qi], idx[qi]):
-                if exclude_self and int(j) == row:
-                    continue
+            for score, j in zip(scores[qi, :valid[qi]], idx[qi, :valid[qi]]):
                 ident = self.entity_ids[int(j)]
-                lst.append(ClosestConcept(ident, self.labels[int(j)], float(score),
-                                          self.url_prefix + ident))
-                if len(lst) == k:
-                    break
+                lst.append(ClosestConcept(ident, self.labels[int(j)],
+                                          float(score), self.url_prefix + ident))
             out.append(lst)
         return out
 
 
+class LRUIndexCache:
+    """Bounded LRU of built ``EmbeddingIndex`` objects.
+
+    Keyed (ontology, model, version). Each entry holds a full embedding
+    table, so the bound is what keeps a long-lived server over many
+    versions/models from growing without limit. Counters are cumulative.
+    """
+
+    def __init__(self, capacity: int = 8):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._data: "OrderedDict[Tuple[str, str, str], EmbeddingIndex]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key: Tuple[str, str, str]) -> Optional[EmbeddingIndex]:
+        with self._lock:
+            idx = self._data.get(key)
+            if idx is None:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return idx
+
+    def put(self, key: Tuple[str, str, str], index: EmbeddingIndex) -> None:
+        with self._lock:
+            self._data[key] = index
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.evictions += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, key: Tuple[str, str, str]) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def keys(self):
+        with self._lock:
+            return list(self._data.keys())
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {"size": len(self._data), "capacity": self.capacity,
+                    "hits": self.hits, "misses": self.misses,
+                    "evictions": self.evictions,
+                    "bytes": sum(v.nbytes for v in self._data.values())}
+
+
 class ServingEngine:
-    """Serves the latest published snapshots from an EmbeddingRegistry."""
+    """Serves published snapshots from an EmbeddingRegistry.
 
-    def __init__(self, registry: EmbeddingRegistry):
+    Latest-version resolution goes through an atomic per-ontology pointer:
+    ``invalidate`` (called by the updater after publishing) swaps the
+    pointer, and already-built indices for the old version stay in the LRU
+    until evicted — in-flight queries pinned to the old version finish
+    consistently instead of racing a cache wipe.
+    """
+
+    def __init__(self, registry: EmbeddingRegistry, cache_capacity: int = 8,
+                 use_pallas: Optional[bool] = None):
         self.registry = registry
-        self._cache: Dict[Tuple[str, str, str], EmbeddingIndex] = {}
+        self.cache = LRUIndexCache(cache_capacity)
+        self.use_pallas = use_pallas
+        self._latest: Dict[str, str] = {}
+        self._lock = threading.Lock()
 
-    def _index(self, ontology: str, model: str, version: Optional[str] = None) -> EmbeddingIndex:
-        version = version or self.registry.store.latest_version(ontology)
-        if version is None:
-            raise KeyError(f"no published versions for {ontology!r}")
-        key = (ontology, version, model)
-        if key not in self._cache:
+    # ------------------------- version resolution ---------------------- #
+    def latest_version(self, ontology: str) -> str:
+        """The pinned latest version for ``ontology`` (resolved from the
+        registry on first use, then only moved by ``invalidate``)."""
+        with self._lock:
+            v = self._latest.get(ontology)
+            if v is None:
+                v = self.registry.store.latest_version(ontology)
+                if v is None:
+                    raise KeyError(f"no published versions for {ontology!r}")
+                self._latest[ontology] = v
+            return v
+
+    def _index(self, ontology: str, model: str,
+               version: Optional[str] = None) -> EmbeddingIndex:
+        version = version or self.latest_version(ontology)
+        key = (ontology, model, version)
+        idx = self.cache.get(key)
+        if idx is None:
             ids, labels, emb, _ = self.registry.get(ontology, model, version)
-            self._cache[key] = EmbeddingIndex(ids, labels, emb)
-        return self._cache[key]
+            idx = EmbeddingIndex(ids, labels, emb, use_pallas=self.use_pallas)
+            self.cache.put(key, idx)
+        return idx
 
-    def invalidate(self, ontology: str) -> None:
-        """Called by the updater after publishing a new version."""
-        self._cache = {k: v for k, v in self._cache.items() if k[0] != ontology}
+    def invalidate(self, ontology: str, new_version: Optional[str] = None
+                   ) -> Optional[str]:
+        """Atomic latest-pointer swap, called by the updater after a
+        publish. Old-version indices are NOT dropped — version-pinned
+        in-flight queries keep working; the LRU ages them out."""
+        v = new_version or self.registry.store.latest_version(ontology)
+        with self._lock:
+            if v is None:
+                self._latest.pop(ontology, None)
+            else:
+                self._latest[ontology] = v
+        return v
+
+    def cache_stats(self) -> Dict[str, int]:
+        return self.cache.stats()
 
     # ------------------------- the three endpoints --------------------- #
-    def download(self, ontology: str, model: str, version: Optional[str] = None) -> str:
-        return self.registry.to_json(ontology, model, version)
+    def download(self, ontology: str, model: str,
+                 version: Optional[str] = None) -> str:
+        return self.registry.to_json(ontology, model,
+                                     version or self.latest_version(ontology))
 
     def similarity(self, ontology: str, model: str, a: str, b: str,
-                   fuzzy: bool = False) -> float:
-        idx = self._index(ontology, model)
+                   fuzzy: bool = False, version: Optional[str] = None) -> float:
+        idx = self._index(ontology, model, version)
         if fuzzy:
             ra, rb = idx.resolve(a, fuzzy=True), idx.resolve(b, fuzzy=True)
             if ra is None or rb is None:
                 raise KeyError(f"unknown class {a if ra is None else b!r}")
-            import numpy as _np
-            return float(_np.dot(idx.unit[ra], idx.unit[rb]))
+            return float(np.dot(idx.unit[ra], idx.unit[rb]))
         return idx.similarity(a, b)
 
     def closest_concepts(self, ontology: str, model: str, query: str,
-                         k: int = 10, fuzzy: bool = False) -> List[ClosestConcept]:
-        idx = self._index(ontology, model)
+                         k: int = 10, fuzzy: bool = False,
+                         version: Optional[str] = None) -> List[ClosestConcept]:
+        idx = self._index(ontology, model, version)
         if fuzzy:
             row = idx.resolve(query, fuzzy=True)
             if row is None:
@@ -213,9 +352,9 @@ class ServingEngine:
 
     # ---------------- paper §6 future work, implemented ---------------- #
     def autocomplete(self, ontology: str, model: str, prefix: str,
-                     limit: int = 10) -> List[str]:
+                     limit: int = 10, version: Optional[str] = None) -> List[str]:
         """Concept-label autocomplete."""
-        return self._index(ontology, model).autocomplete(prefix, limit)
+        return self._index(ontology, model, version).autocomplete(prefix, limit)
 
 
 @dataclasses.dataclass
@@ -224,33 +363,127 @@ class TopKRequest:
     model: str
     query: str
     k: int = 10
+    version: Optional[str] = None    # None = pin to latest at submit time
 
 
-class RequestBatcher:
-    """Groups concurrent top-k requests per (ontology, model) and executes
-    each group as ONE batched kernel call — amortizing the (N, d) scan."""
+def _bucket_size(n: int, max_batch: int) -> int:
+    """Smallest power of two >= n, capped at max_batch."""
+    b = 1
+    while b < n:
+        b <<= 1
+    return min(b, max_batch)
 
-    def __init__(self, engine: ServingEngine, max_batch: int = 64):
+
+class BatchScheduler:
+    """Groups concurrent top-k requests into micro-batched kernel calls.
+
+    Replaces the seed's ``RequestBatcher`` with production semantics:
+
+      * **monotonic tickets** — one global ``itertools.count``, never reset,
+        so tickets held across flushes can't collide with new submissions
+        (the old batcher restarted at 0 every flush);
+      * **version pinning at submit** — each request resolves its serving
+        version when enqueued, so an update landing between submit and
+        flush doesn't change what an in-flight request sees;
+      * **per-(ontology, model, version, k) queues** — each flushes as one
+        or more batched kernel calls;
+      * **power-of-two padding buckets** — micro-batches are padded up to
+        the next power of two (≤ max_batch) by repeating the last query, so
+        the jitted kernel sees at most ~log2(max_batch) distinct Q shapes
+        instead of one per batch size;
+      * **poison isolation** — an unknown query fails only its own ticket
+        (recorded in ``errors``), not the whole batch.
+    """
+
+    def __init__(self, engine: ServingEngine, max_batch: int = 64,
+                 max_errors: int = 1024):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.engine = engine
+        # buckets are powers of two capped at the caller's exact max_batch
+        # (the cap bounds kernel batch memory; a non-power-of-two max_batch
+        # costs at most one extra jitted shape for full batches)
         self.max_batch = max_batch
-        self._pending: List[Tuple[int, TopKRequest]] = []
+        self.max_errors = max_errors
+        self._tickets = itertools.count()
+        self._queues: Dict[Tuple[str, str, str, int],
+                           List[Tuple[int, TopKRequest]]] = {}
+        self._lock = threading.Lock()
+        #: ticket -> error message for the most recent failed requests
+        #: (bounded at ``max_errors``: oldest entries are dropped)
+        self.errors: Dict[int, str] = {}
+        self.stats = {"submitted": 0, "flushes": 0, "batches": 0,
+                      "padded_queries": 0, "failed": 0}
+
+    def _record_errors(self, errors: Dict[int, str]) -> None:
+        """Merge under lock, keeping only the most recent max_errors."""
+        self.errors.update(errors)
+        self.stats["failed"] += len(errors)
+        while len(self.errors) > self.max_errors:
+            self.errors.pop(next(iter(self.errors)))
 
     def submit(self, req: TopKRequest) -> int:
-        ticket = len(self._pending)
-        self._pending.append((ticket, req))
+        with self._lock:
+            ticket = next(self._tickets)
+            self.stats["submitted"] += 1
+        try:
+            version = req.version or self.engine.latest_version(req.ontology)
+        except KeyError as e:
+            # unknown ontology fails only this ticket, not the accept loop
+            with self._lock:
+                self._record_errors({ticket: str(e)})
+            return ticket
+        with self._lock:
+            self._queues.setdefault(
+                (req.ontology, req.model, version, req.k), []).append((ticket, req))
         return ticket
 
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._queues.values())
+
     def flush(self) -> Dict[int, List[ClosestConcept]]:
-        groups: Dict[Tuple[str, str, int], List[Tuple[int, TopKRequest]]] = {}
-        for ticket, req in self._pending:
-            groups.setdefault((req.ontology, req.model, req.k), []).append((ticket, req))
+        with self._lock:
+            queues, self._queues = self._queues, {}
         results: Dict[int, List[ClosestConcept]] = {}
-        for (ont, model, k), items in groups.items():
-            index = self.engine._index(ont, model)
+        errors: Dict[int, str] = {}
+        n_batches = n_padded = 0
+        for (ont, model, version, k), items in queues.items():
+            # a broken queue (unpublished model, bad version, k < 1) fails
+            # only its own tickets — other queues in this flush still serve
+            try:
+                index = self.engine._index(ont, model, version)
+            except Exception as e:
+                for ticket, _ in items:
+                    errors[ticket] = str(e)
+                continue
             for start in range(0, len(items), self.max_batch):
-                chunk = items[start : start + self.max_batch]
-                batch_res = index.top_k([r.query for _, r in chunk], k)
-                for (ticket, _), res in zip(chunk, batch_res):
+                chunk = items[start:start + self.max_batch]
+                live: List[Tuple[int, int]] = []        # (ticket, row)
+                for ticket, req in chunk:
+                    row = index.resolve(req.query)
+                    if row is None:
+                        errors[ticket] = f"unknown class {req.query!r}"
+                    else:
+                        live.append((ticket, row))
+                if not live:
+                    continue
+                rows = [r for _, r in live]
+                bucket = _bucket_size(len(rows), self.max_batch)
+                pad = bucket - len(rows)
+                try:
+                    batch_res = index.top_k_rows(rows + [rows[-1]] * pad, k)
+                except Exception as e:
+                    for ticket, _ in live:
+                        errors[ticket] = str(e)
+                    continue
+                for (ticket, _), res in zip(live, batch_res):
                     results[ticket] = res
-        self._pending.clear()
+                n_batches += 1
+                n_padded += pad
+        with self._lock:
+            self._record_errors(errors)
+            self.stats["flushes"] += 1
+            self.stats["batches"] += n_batches
+            self.stats["padded_queries"] += n_padded
         return results

@@ -23,6 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from ..checkpoint import version_sort_key
 from ..kge import KGETrainer, TrainConfig, make_model, PAPER_DIM, PAPER_EPOCHS
 from ..data import corpus, skipgram_pairs
 from ..ontology import KnowledgeGraph, load_obo
@@ -51,7 +52,10 @@ class FileReleaseChannel(ReleaseChannel):
         self.directory = Path(directory)
 
     def latest(self) -> Tuple[str, KnowledgeGraph]:
-        releases = sorted(self.directory.glob("*.obo"))
+        # natural/date-aware ordering: '2024-10' is newer than '2024-9',
+        # which plain lexicographic sort gets backwards
+        releases = sorted(self.directory.glob("*.obo"),
+                          key=lambda p: version_sort_key(p.stem))
         if not releases:
             raise FileNotFoundError(f"no releases in {self.directory}")
         path = releases[-1]
@@ -122,7 +126,9 @@ class Updater:
             details[model_name] = {"final_loss": stats.get("final_loss"),
                                    "triples_per_s": stats.get("triples_per_s")}
         if self.engine is not None:
-            self.engine.invalidate(channel.name)
+            # atomic latest-pointer swap: in-flight queries pinned to the
+            # old version finish consistently; new queries see `version`
+            self.engine.invalidate(channel.name, version)
         return UpdateReport(channel.name, version, checksum, True, trained,
                             time.perf_counter() - t0, details)
 

@@ -29,13 +29,21 @@ def _use_pallas(flag: Optional[bool]) -> bool:
 
 
 def topk_cosine(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
-                use_pallas: Optional[bool] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """(Q, d) x (N, d) -> top-k (scores, indices), descending."""
+                exclude_rows: Optional[jnp.ndarray] = None,
+                use_pallas: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(Q, d) x (N, d) -> (scores, indices, valid), descending per row.
+
+    k is clamped to N; ``exclude_rows`` (−1 = none) masks one table row per
+    query inside the kernel; entries past ``valid[q]`` are sentinel padding
+    that callers must not surface.
+    """
     if _use_pallas(flag=use_pallas):
         block_n = min(1024, max(128, e_unit.shape[0]))
-        return topk_cosine_pallas(q_unit, e_unit, k, block_n=block_n,
-                                  interpret=_INTERPRET)
-    return ref.topk_cosine_ref(q_unit, e_unit, k)
+        return topk_cosine_pallas(q_unit, e_unit, k,
+                                  exclude_rows=exclude_rows,
+                                  block_n=block_n, interpret=_INTERPRET)
+    return ref.topk_cosine_ref(q_unit, e_unit, k, exclude_rows=exclude_rows)
 
 
 def kge_score(h, r, t, neg, corrupt_head, model: str = "transe_l1",

@@ -5,21 +5,40 @@ sweeping shapes and dtypes).
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+NEG_INF = -1e30
+
 
 # --------------------------- topk_similarity --------------------------- #
-def topk_cosine_ref(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int
-                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def topk_cosine_ref(
+    q_unit: jnp.ndarray,
+    e_unit: jnp.ndarray,
+    k: int,
+    exclude_rows: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """q_unit (Q, d), e_unit (N, d), both row-normalized.
 
-    Returns (scores (Q, k), indices (Q, k)) sorted descending.
+    Returns (scores (Q, k'), indices (Q, k'), valid (Q,)) sorted descending,
+    with k' = min(k, N). ``exclude_rows`` masks one table row per query
+    (-1 = none); entries past ``valid[q]`` are sentinel padding.
     """
+    n = e_unit.shape[0]
+    k = min(k, n)
     scores = q_unit @ e_unit.T
-    return jax.lax.top_k(scores, k)
+    if exclude_rows is None:
+        excl = jnp.full((q_unit.shape[0],), -1, jnp.int32)
+    else:
+        excl = jnp.asarray(exclude_rows, jnp.int32)
+    col = jnp.arange(n, dtype=jnp.int32)[None, :]
+    scores = jnp.where(col == excl[:, None], NEG_INF, scores)
+    s, i = jax.lax.top_k(scores, k)
+    excluded = ((excl >= 0) & (excl < n)).astype(jnp.int32)
+    valid = jnp.minimum(k, n - excluded)
+    return s, i, valid
 
 
 # ------------------------------ kge_score ------------------------------ #

@@ -10,11 +10,21 @@ Grid: (N // block_n,) — sequential on TPU, so the output block is safely
 revisited and acts as the running accumulator. The merge is k rounds of
 (max, argmax, mask) over the (Q, k + block_n) candidate row — k is small
 (10 in the paper) so this stays in VREGs.
+
+Serving-correctness contract (PR 1):
+  * ``exclude_rows`` — per-query table row to mask out (−1 for none). The
+    serving layer uses this for self-exclusion, replacing the old
+    "ask for k+1 then filter in Python" dance, which silently returned
+    k−1 results whenever the query row was *not* in the top k+1.
+  * ``k`` is clamped to N at trace time, and a per-query ``valid`` count
+    is returned: entries ``[valid:]`` of a row are sentinel padding
+    (score −1e30, index 0) and must not be surfaced. Before this, k > N
+    leaked sentinel rows pointing at entity 0 into API responses.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,14 +33,17 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _topk_kernel(q_ref, e_ref, out_s_ref, out_i_ref, *, k: int, block_n: int,
-                 n_real: int):
+def _topk_kernel(q_ref, e_ref, x_ref, out_s_ref, out_i_ref, out_v_ref, *,
+                 k: int, block_n: int, n_real: int):
     step = pl.program_id(0)
+    excl = x_ref[...]                    # (Q, 1) int32, -1 = no exclusion
 
     @pl.when(step == 0)
     def _init():
         out_s_ref[...] = jnp.full_like(out_s_ref, NEG_INF)
         out_i_ref[...] = jnp.zeros_like(out_i_ref)
+        excluded = ((excl >= 0) & (excl < n_real)).astype(jnp.int32)
+        out_v_ref[...] = jnp.minimum(k, n_real - excluded)
 
     q = q_ref[...]                       # (Q, d)
     e = e_ref[...]                       # (block_n, d)
@@ -38,6 +51,7 @@ def _topk_kernel(q_ref, e_ref, out_s_ref, out_i_ref, *, k: int, block_n: int,
     s = jnp.dot(q, e.T, preferred_element_type=jnp.float32)   # (Q, block_n)
     col = step * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     s = jnp.where(col < n_real, s, NEG_INF)                   # mask pad rows
+    s = jnp.where(col == excl, NEG_INF, s)                    # self-exclusion
 
     cand_s = jnp.concatenate([out_s_ref[...], s], axis=1)          # (Q, k+bn)
     cand_i = jnp.concatenate([out_i_ref[...], col], axis=1)
@@ -60,11 +74,19 @@ def topk_cosine_pallas(
     q_unit: jnp.ndarray,      # (Q, d) row-normalized queries
     e_unit: jnp.ndarray,      # (N, d) row-normalized table
     k: int,
+    exclude_rows: Optional[jnp.ndarray] = None,   # (Q,) int32, -1 = none
     block_n: int = 1024,
     interpret: bool = True,   # CPU container: interpret; on TPU pass False
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (scores (Q, k'), indices (Q, k'), valid (Q,)) with
+    k' = min(k, N); rows are descending and entries past ``valid[q]`` are
+    sentinel padding."""
     qn, d = q_unit.shape
     n = e_unit.shape[0]
+    k = min(k, n)                        # static clamp: k never exceeds N
+    if exclude_rows is None:
+        exclude_rows = jnp.full((qn,), -1, jnp.int32)
+    excl = jnp.asarray(exclude_rows, jnp.int32).reshape(qn, 1)
     # pad N to a block multiple with -inf-scoring rows (zero vectors)
     n_pad = -n % block_n
     if n_pad:
@@ -74,22 +96,25 @@ def topk_cosine_pallas(
     n_total = n + n_pad
     grid = (n_total // block_n,)
 
-    out_s, out_i = pl.pallas_call(
+    out_s, out_i, out_v = pl.pallas_call(
         functools.partial(_topk_kernel, k=k, block_n=block_n, n_real=n),
         grid=grid,
         in_specs=[
             pl.BlockSpec((qn, d), lambda i: (0, 0)),          # q resident
             pl.BlockSpec((block_n, d), lambda i: (i, 0)),     # stream table
+            pl.BlockSpec((qn, 1), lambda i: (0, 0)),          # exclusions
         ],
         out_specs=[
             pl.BlockSpec((qn, k), lambda i: (0, 0)),          # running top-k
             pl.BlockSpec((qn, k), lambda i: (0, 0)),
+            pl.BlockSpec((qn, 1), lambda i: (0, 0)),          # valid counts
         ],
         out_shape=[
             jax.ShapeDtypeStruct((qn, k), jnp.float32),
             jax.ShapeDtypeStruct((qn, k), jnp.int32),
+            jax.ShapeDtypeStruct((qn, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(q_unit.astype(jnp.float32), e_unit.astype(jnp.float32))
+    )(q_unit.astype(jnp.float32), e_unit.astype(jnp.float32), excl)
 
-    return out_s, out_i
+    return out_s, out_i, out_v[:, 0]

@@ -32,7 +32,7 @@ def main():
     args = ap.parse_args()
 
     from repro.core.registry import EmbeddingRegistry
-    from repro.core.serving import RequestBatcher, ServingEngine, TopKRequest
+    from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
 
     registry = EmbeddingRegistry(args.registry)
     if not registry.versions(args.ontology):
@@ -65,15 +65,18 @@ def main():
           f"p99={np.percentile(lat,99):.3f}ms over {args.requests} requests")
 
     # -- endpoint 3: top-k closest, batched ------------------------------ #
-    batcher = RequestBatcher(engine, max_batch=args.batch)
+    sched = BatchScheduler(engine, max_batch=args.batch)
     t0 = time.perf_counter()
-    tickets = [batcher.submit(TopKRequest(args.ontology, args.model,
-                                          ids[int(i)], args.k))
+    tickets = [sched.submit(TopKRequest(args.ontology, args.model,
+                                        ids[int(i)], args.k))
                for i in rng.integers(0, len(ids), args.requests)]
-    results = batcher.flush()
+    results = sched.flush()
     dt = time.perf_counter() - t0
     print(f"[serve] top-{args.k}: {args.requests} requests in {dt:.2f}s "
-          f"({args.requests/dt:.0f} req/s batched)")
+          f"({args.requests/dt:.0f} req/s batched; "
+          f"{sched.stats['batches']} micro-batches, "
+          f"{sched.stats['padded_queries']} padded) "
+          f"cache={engine.cache_stats()}")
     sample = results[tickets[0]]
     print("[serve] sample result:")
     for c in sample[:3]:

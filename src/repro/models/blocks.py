@@ -31,6 +31,15 @@ from .layers import apply_norm, dense, dense_init, mlp, mlp_init, norm_init, rop
 Params = Dict[str, Any]
 
 
+def _pvary(x: jnp.ndarray, axis: str) -> jnp.ndarray:
+    """``jax.lax.pvary`` where available (JAX >= 0.6 manual-axes typing);
+    identity otherwise — on older JAX the varying/invariant distinction
+    isn't tracked, so there is nothing to retype."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis)
+    return x
+
+
 # ===================================================================== #
 # Attention block
 # ===================================================================== #
@@ -418,7 +427,7 @@ def moe_apply_shard_map(p: Params, x: jnp.ndarray, cfg: ArchConfig, mesh
         # bitwise identical, but this moves the (required) backward psum of
         # the dispatch to the TOKEN-shaped boundary dL/dxf instead of the
         # top_k-times-larger slot-shaped one (§Perf grok iteration 5).
-        xf = jax.lax.pvary(xf, "model")
+        xf = _pvary(xf, "model")
         logits = (xf @ router).astype(jnp.float32)          # (T, E0)
         probs = jax.nn.softmax(logits, axis=-1)
         w, idx = jax.lax.top_k(probs, K0)                   # (T, K0)
@@ -492,7 +501,7 @@ def _psum_identity_bwd(y: jnp.ndarray, axis: str) -> jnp.ndarray:
     f.defvjp(lambda v: (jax.lax.psum(v, axis), None),
              # pvary: retype the (invariant) cotangent as axis-varying —
              # no data movement, just the manual-axes bookkeeping.
-             lambda _, ct: (jax.lax.pvary(ct, axis),))
+             lambda _, ct: (_pvary(ct, axis),))
     return f(y)
 
 

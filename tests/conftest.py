@@ -9,6 +9,21 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 # make `import benchmarks.roofline` work regardless of invocation dir
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
+# `hypothesis` isn't installed in the container: register a deterministic
+# fixed-seed stub so the property-test modules collect and run everywhere
+# (see tests/_hypothesis_stub.py). A real install always wins.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", Path(__file__).with_name("_hypothesis_stub.py"))
+    _stub = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_stub)
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
+
 import jax
 import numpy as np
 import pytest

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.provenance import prov_record, validate_prov
 from repro.core.registry import EmbeddingRegistry
-from repro.core.serving import RequestBatcher, ServingEngine, TopKRequest
+from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
 from repro.core.updater import (FileReleaseChannel, Updater, poll_loop)
 from repro.kge.train import TrainConfig
 from repro.ontology import obo
@@ -50,13 +50,16 @@ def test_new_release_triggers_retrain_and_invalidation(served, tiny_go):
     registry, engine, ch, upd = served
     # warm the engine cache, then release a new version
     engine.similarity("go", "transe", tiny_go.entities[0], tiny_go.entities[1])
-    assert len(engine._cache) == 1
+    assert len(engine.cache) == 1
     upd.engine = engine
     kg2 = evolve(tiny_go, GO_SPEC, seed=3)
     ch.bump("2023-07-01", kg2)
     rep = upd.run_once(ch)
     assert rep.changed
-    assert engine._cache == {}                       # invalidated
+    # atomic latest-pointer swap: new queries see the new version, while
+    # the old version's index stays cached for in-flight pinned queries
+    assert engine.latest_version("go") == "2023-07-01"
+    assert ("go", "transe", "2023-01-01") in engine.cache
     assert registry.versions("go") == ["2023-01-01", "2023-07-01"]
     # endpoints now serve the NEW version's entity set
     new_ent = [e for e in kg2.entities if e not in set(tiny_go.entities)][0]
@@ -74,6 +77,31 @@ def test_file_release_channel(tmp_path, tiny_go):
     v, kg = ch.latest()
     assert v == "2023-07-01"
     assert kg.checksum() == kg2.checksum()
+
+
+def test_file_release_channel_natural_version_order(tmp_path, tiny_go):
+    """'2024-9' must sort BEFORE '2024-10' (lexicographic sort served the
+    stale September release as latest)."""
+    d = tmp_path / "releases"
+    d.mkdir()
+    kg2 = evolve(tiny_go, GO_SPEC, seed=1)
+    obo.save_obo(tiny_go, d / "2024-9.obo", header_version="2024-9")
+    obo.save_obo(kg2, d / "2024-10.obo", header_version="2024-10")
+    ch = FileReleaseChannel("go", d)
+    v, kg = ch.latest()
+    assert v == "2024-10"
+    assert kg.checksum() == kg2.checksum()
+
+
+def test_store_latest_version_natural_order(tmp_path):
+    from repro.checkpoint import SnapshotStore, version_sort_key
+    store = SnapshotStore(tmp_path / "s")
+    for v in ("2024-10", "2024-9", "2023-12", "2024-11"):
+        store.save("go", v, "transe",
+                   {"embeddings": np.zeros((1, 2), np.float32)}, {})
+    assert store.versions("go") == ["2023-12", "2024-9", "2024-10", "2024-11"]
+    assert store.latest_version("go") == "2024-11"
+    assert version_sort_key("v10") > version_sort_key("v2")
 
 
 def test_poll_loop_runs_all_channels(registry, tiny_go, tiny_hp):
@@ -136,13 +164,13 @@ def test_closest_concepts_endpoint(served, tiny_go):
     assert all(isinstance(c.label, str) and c.label for c in res)
 
 
-def test_batcher_matches_individual_queries(served, tiny_go):
+def test_scheduler_matches_individual_queries(served, tiny_go):
     registry, engine, ch, _ = served
-    batcher = RequestBatcher(engine, max_batch=8)
+    sched = BatchScheduler(engine, max_batch=8)
     queries = tiny_go.entities[:20]
-    tickets = [batcher.submit(TopKRequest("go", "transe", q, 5))
+    tickets = [sched.submit(TopKRequest("go", "transe", q, 5))
                for q in queries]
-    batched = batcher.flush()
+    batched = sched.flush()
     for t, q in zip(tickets, queries):
         solo = engine.closest_concepts("go", "transe", q, k=5)
         got = batched[t]

@@ -33,19 +33,59 @@ def _unit(key, n, d, dtype=jnp.float32):
 def test_topk_matches_ref(Q, N, d, k, block_n):
     kq, ke = jax.random.split(jax.random.key(0))
     q, e = _unit(kq, Q, d), _unit(ke, N, d)
-    s, i = topk_cosine_pallas(q, e, k, block_n=block_n, interpret=True)
-    s_ref, i_ref = ref.topk_cosine_ref(q, e, k)
+    s, i, v = topk_cosine_pallas(q, e, k, block_n=block_n, interpret=True)
+    s_ref, i_ref, v_ref = ref.topk_cosine_ref(q, e, k)
     np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
                                rtol=1e-5, atol=1e-5)
     np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    assert np.asarray(v).tolist() == [min(k, N)] * Q
+
+
+def test_topk_exclude_rows_matches_ref():
+    kq, ke = jax.random.split(jax.random.key(7))
+    q, e = _unit(kq, 4, 32), _unit(ke, 200, 32)
+    excl = jnp.array([0, 57, 199, -1], jnp.int32)
+    s, i, v = topk_cosine_pallas(q, e, 10, exclude_rows=excl, block_n=64,
+                                 interpret=True)
+    s_ref, i_ref, v_ref = ref.topk_cosine_ref(q, e, 10, exclude_rows=excl)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+    np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref))
+    i = np.asarray(i)
+    for r, x in enumerate([0, 57, 199]):
+        assert x not in i[r]
+
+
+def test_topk_k_exceeds_table_regression():
+    """Regression: k (or k+1 with self-exclusion) > N used to return
+    sentinel rows (score -1e30, index 0) that serving surfaced as fake
+    entity-0 results. Now k clamps to N and `valid` marks real entries."""
+    kq, ke = jax.random.split(jax.random.key(9))
+    q, e = _unit(kq, 2, 8), _unit(ke, 3, 8)
+    excl = jnp.array([1, -1], jnp.int32)
+    for impl in ("pallas", "ref"):
+        if impl == "pallas":
+            s, i, v = topk_cosine_pallas(q, e, 10, exclude_rows=excl,
+                                         block_n=32, interpret=True)
+        else:
+            s, i, v = ref.topk_cosine_ref(q, e, 10, exclude_rows=excl)
+        s, i, v = np.asarray(s), np.asarray(i), np.asarray(v)
+        assert s.shape == (2, 3)                      # clamped to N
+        assert v.tolist() == [2, 3]                   # row 0 excludes itself
+        for r in range(2):
+            assert (s[r, :v[r]] > -1e29).all()        # no sentinel in valid
+            assert len(set(i[r, :v[r]].tolist())) == v[r]
+        assert 1 not in i[0, :v[0]]
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_topk_dtypes(dtype):
     kq, ke = jax.random.split(jax.random.key(1))
     q, e = _unit(kq, 3, 64, dtype), _unit(ke, 300, 64, dtype)
-    s, i = topk_cosine_pallas(q, e, 10, block_n=128, interpret=True)
-    s_ref, i_ref = ref.topk_cosine_ref(q, e, 10)
+    s, i, _ = topk_cosine_pallas(q, e, 10, block_n=128, interpret=True)
+    s_ref, i_ref, _ = ref.topk_cosine_ref(q, e, 10)
     # bf16 inputs: scores match to bf16 resolution; indices may swap among
     # near-ties, so compare score values (sorted) rather than exact indices.
     np.testing.assert_allclose(np.asarray(s, np.float32),
@@ -60,7 +100,7 @@ def test_topk_property(n, d, k, seed):
     kq, ke = jax.random.split(jax.random.key(seed))
     q, e = _unit(kq, 2, d), _unit(ke, n, d)
     k = min(k, n)
-    s, i = topk_cosine_pallas(q, e, k, block_n=64, interpret=True)
+    s, i, _ = topk_cosine_pallas(q, e, k, block_n=64, interpret=True)
     s, i = np.asarray(s), np.asarray(i)
     full = np.asarray(q @ e.T)
     # invariants: scores descending; indices in range & unique per row;
@@ -136,8 +176,10 @@ def test_swa_kernel_matches_ref(B, H, S, hd, W):
 def test_ops_topk_dispatches_both_paths():
     kq, ke = jax.random.split(jax.random.key(4))
     q, e = _unit(kq, 2, 32), _unit(ke, 128, 32)
-    s1, i1 = ops.topk_cosine(q, e, 5, use_pallas=True)
-    s2, i2 = ops.topk_cosine(q, e, 5, use_pallas=False)
+    excl = jnp.array([3, -1], jnp.int32)
+    s1, i1, v1 = ops.topk_cosine(q, e, 5, exclude_rows=excl, use_pallas=True)
+    s2, i2, v2 = ops.topk_cosine(q, e, 5, exclude_rows=excl, use_pallas=False)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5,
                                atol=1e-5)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))

@@ -1,0 +1,252 @@
+"""ServingEngine + BatchScheduler end-to-end: version pinning, atomic
+invalidation during an in-flight batch, LRU eviction stats, monotonic
+ticket IDs, and the no-sentinel guarantee for any k.
+
+Snapshots are published directly (no training) so these stay fast.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.serving import (BatchScheduler, EmbeddingIndex, LRUIndexCache,
+                                ServingEngine, TopKRequest, _bucket_size)
+
+N, D = 40, 12
+
+
+def _publish(registry, ontology, version, model="transe", n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = [f"{ontology.upper()}:{i:07d}" for i in range(n)]
+    labels = [f"{ontology} term {i}" for i in range(n)]
+    emb = rng.standard_normal((n, D)).astype(np.float32)
+    registry.publish(ontology, version, model, ids, labels, emb,
+                     ontology_checksum=f"ck-{version}-{seed}",
+                     hyperparameters={"dim": D})
+    return ids
+
+
+@pytest.fixture()
+def engine(registry):
+    ids = _publish(registry, "go", "2024-01", seed=1)
+    _publish(registry, "go", "2024-02", seed=2)
+    eng = ServingEngine(registry, cache_capacity=4)
+    return eng, ids
+
+
+# --------------------------- version pinning --------------------------- #
+def test_version_pinned_endpoints(engine):
+    eng, ids = engine
+    assert eng.latest_version("go") == "2024-02"
+    s_latest = eng.similarity("go", "transe", ids[0], ids[1])
+    s_old = eng.similarity("go", "transe", ids[0], ids[1], version="2024-01")
+    s_pin = eng.similarity("go", "transe", ids[0], ids[1], version="2024-02")
+    assert s_latest == s_pin and s_latest != s_old
+
+    top_old = eng.closest_concepts("go", "transe", ids[3], k=5,
+                                   version="2024-01")
+    top_new = eng.closest_concepts("go", "transe", ids[3], k=5)
+    assert [c.identifier for c in top_old] != [c.identifier for c in top_new]
+
+    # download honors the pin too
+    assert eng.download("go", "transe", "2024-01") != eng.download("go", "transe")
+
+
+def test_invalidate_is_atomic_pointer_swap(engine, registry):
+    eng, ids = engine
+    eng.similarity("go", "transe", ids[0], ids[1])      # build 2024-02 index
+    _publish(registry, "go", "2024-03", seed=3)
+    # not yet invalidated: the engine still serves its pinned latest
+    assert eng.latest_version("go") == "2024-02"
+    eng.invalidate("go", "2024-03")
+    assert eng.latest_version("go") == "2024-03"
+    # the old index is NOT wiped — pinned in-flight queries stay consistent
+    assert ("go", "transe", "2024-02") in eng.cache
+    s = eng.similarity("go", "transe", ids[0], ids[1], version="2024-02")
+    assert isinstance(s, float)
+
+
+def test_invalidation_during_flight(engine, registry):
+    """Requests submitted before an update must be answered from the version
+    that was latest at submit time, even if the update lands pre-flush."""
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    tickets = [sched.submit(TopKRequest("go", "transe", q, 5))
+               for q in ids[:6]]
+    expected = [eng.closest_concepts("go", "transe", q, k=5,
+                                     version="2024-02") for q in ids[:6]]
+    # update lands while the batch is in flight
+    _publish(registry, "go", "2024-03", seed=3)
+    eng.invalidate("go", "2024-03")
+    results = sched.flush()
+    for t, exp in zip(tickets, expected):
+        assert [c.identifier for c in results[t]] == [c.identifier for c in exp]
+    # a fresh submit sees the new version
+    t_new = sched.submit(TopKRequest("go", "transe", ids[0], 5))
+    got = sched.flush()[t_new]
+    exp_new = eng.closest_concepts("go", "transe", ids[0], k=5,
+                                   version="2024-03")
+    assert [c.identifier for c in got] == [c.identifier for c in exp_new]
+
+
+# ------------------------------ LRU cache ------------------------------ #
+def test_lru_eviction_and_stats(registry):
+    for v in ("v1", "v2", "v3"):
+        _publish(registry, "go", v, seed=hash(v) % 100)
+    eng = ServingEngine(registry, cache_capacity=2)
+    ids = [f"GO:{i:07d}" for i in range(N)]
+    eng.similarity("go", "transe", ids[0], ids[1], version="v1")
+    eng.similarity("go", "transe", ids[0], ids[1], version="v2")
+    eng.similarity("go", "transe", ids[0], ids[1], version="v2")   # hit
+    eng.similarity("go", "transe", ids[0], ids[1], version="v3")   # evicts v1
+    stats = eng.cache_stats()
+    assert stats["size"] == 2 and stats["capacity"] == 2
+    assert stats["hits"] == 1 and stats["misses"] == 3
+    assert stats["evictions"] == 1
+    assert ("go", "transe", "v1") not in eng.cache
+    # re-touching the evicted version rebuilds it (miss + eviction again)
+    eng.similarity("go", "transe", ids[0], ids[1], version="v1")
+    assert eng.cache_stats()["evictions"] == 2
+    assert eng.cache_stats()["bytes"] > 0
+
+
+def test_lru_cache_unit():
+    cache = LRUIndexCache(capacity=2)
+    mk = lambda seed: EmbeddingIndex(
+        ["a", "b"], ["la", "lb"],
+        np.random.default_rng(seed).standard_normal((2, 4)))
+    cache.put(("o", "m", "v1"), mk(1))
+    cache.put(("o", "m", "v2"), mk(2))
+    assert cache.get(("o", "m", "v1")) is not None     # v1 now most recent
+    cache.put(("o", "m", "v3"), mk(3))                 # evicts v2 (LRU)
+    assert cache.get(("o", "m", "v2")) is None
+    assert cache.get(("o", "m", "v1")) is not None
+    assert cache.stats()["evictions"] == 1
+    with pytest.raises(ValueError):
+        LRUIndexCache(capacity=0)
+
+
+# ------------------------------ scheduler ------------------------------ #
+def test_ticket_ids_monotonic_across_flushes(engine):
+    """The seed's RequestBatcher reset tickets to 0 every flush — a ticket
+    held across a flush collided with the next batch's first request."""
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=4)
+    seen = []
+    for round_ in range(3):
+        tickets = [sched.submit(TopKRequest("go", "transe", q, 3))
+                   for q in ids[:5]]
+        res = sched.flush()
+        assert set(res) == set(tickets)
+        seen.extend(tickets)
+    assert seen == sorted(seen) and len(set(seen)) == len(seen)
+
+
+def test_scheduler_padding_buckets(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=16)
+    for q in ids[:5]:                                   # 5 -> bucket 8
+        sched.submit(TopKRequest("go", "transe", q, 3))
+    res = sched.flush()
+    assert len(res) == 5
+    assert sched.stats["batches"] == 1
+    assert sched.stats["padded_queries"] == 3
+    # padded results must not leak into the response set
+    assert sorted(res) == list(range(5))
+    assert _bucket_size(1, 64) == 1 and _bucket_size(5, 64) == 8
+    assert _bucket_size(65, 64) == 64 and _bucket_size(33, 64) == 64
+
+
+def test_scheduler_unknown_query_fails_only_its_ticket(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    t_ok = sched.submit(TopKRequest("go", "transe", ids[0], 3))
+    t_bad = sched.submit(TopKRequest("go", "transe", "GO:9999999", 3))
+    res = sched.flush()
+    assert t_ok in res and len(res[t_ok]) == 3
+    assert t_bad not in res and t_bad in sched.errors
+    assert sched.stats["failed"] == 1
+
+
+def test_scheduler_broken_queue_fails_only_its_tickets(engine):
+    """A queue that can't build its index (unpublished model / bad version)
+    or can't execute (k < 1) must not poison other queues in the flush."""
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    t_ok = sched.submit(TopKRequest("go", "transe", ids[0], 3))
+    t_nomodel = sched.submit(TopKRequest("go", "no-such-model", ids[0], 3))
+    t_badver = sched.submit(TopKRequest("go", "transe", ids[0], 3,
+                                        version="1999-01"))
+    t_badk = sched.submit(TopKRequest("go", "transe", ids[1], 0))
+    res = sched.flush()
+    assert t_ok in res and len(res[t_ok]) == 3
+    for t in (t_nomodel, t_badver, t_badk):
+        assert t not in res and t in sched.errors
+    assert sched.stats["failed"] == 3
+
+
+def test_scheduler_unknown_ontology_fails_ticket_not_accept_loop(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    t_bad = sched.submit(TopKRequest("no-such-ontology", "transe", ids[0], 3))
+    t_ok = sched.submit(TopKRequest("go", "transe", ids[0], 3))
+    assert t_bad in sched.errors                       # failed at submit
+    res = sched.flush()
+    assert t_ok in res and t_bad not in res
+
+
+def test_scheduler_errors_are_bounded(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=8, max_errors=4)
+    tickets = [sched.submit(TopKRequest("go", "transe", f"BOGUS-{i}", 3))
+               for i in range(7)]
+    sched.flush()
+    assert len(sched.errors) == 4                      # oldest dropped
+    assert all(t in sched.errors for t in tickets[-4:])
+    assert sched.stats["failed"] == 7                  # counter still exact
+
+
+def test_scheduler_respects_exact_max_batch_cap(engine):
+    """max_batch is a hard cap on kernel batch size: buckets stay powers of
+    two below it, and a non-power-of-two cap is honored, not rounded up."""
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=12)
+    assert sched.max_batch == 12
+    for i in range(30):                        # 12 + 12 + 6->bucket 8
+        sched.submit(TopKRequest("go", "transe", ids[i % len(ids)], 3))
+    res = sched.flush()
+    assert len(res) == 30
+    assert sched.stats["batches"] == 3
+    assert sched.stats["padded_queries"] == 2  # only the tail pads, to 8
+    assert _bucket_size(10, 12) == 12          # capped at the exact max
+
+
+def test_scheduler_groups_by_version_and_k(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=32)
+    sched.submit(TopKRequest("go", "transe", ids[0], 3))
+    sched.submit(TopKRequest("go", "transe", ids[1], 3, version="2024-01"))
+    sched.submit(TopKRequest("go", "transe", ids[2], 7))
+    res = sched.flush()
+    assert sched.stats["batches"] == 3                  # three distinct keys
+    assert len(res) == 3
+
+
+# ------------------------ no-sentinel guarantee ------------------------ #
+@settings(max_examples=12, deadline=None)
+@given(k=st.integers(1, 3 * N), n=st.integers(2, 25), seed=st.integers(0, 99))
+def test_closest_concepts_never_returns_sentinels(tmp_path_factory, k, n, seed):
+    """For ANY k >= 1 — including k far beyond the table size — results
+    contain only real entities, unique, self-excluded, score-sorted."""
+    from repro.core.registry import EmbeddingRegistry
+    registry = EmbeddingRegistry(tmp_path_factory.mktemp("reg"))
+    ids = _publish(registry, "hp", "v1", n=n, seed=seed)
+    eng = ServingEngine(registry)
+    res = eng.closest_concepts("hp", "transe", ids[0], k=k)
+    assert len(res) == min(k, n - 1)                    # self excluded
+    got = [c.identifier for c in res]
+    assert len(set(got)) == len(got)
+    assert ids[0] not in got
+    assert all(g in set(ids) for g in got)
+    scores = [c.score for c in res]
+    assert scores == sorted(scores, reverse=True)
+    assert all(-1.001 <= s <= 1.001 for s in scores)    # real cosine, no -1e30
