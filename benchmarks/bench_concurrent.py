@@ -1,0 +1,220 @@
+"""Concurrent-serving benchmark: the background flush loop under 1/4/16
+submitter threads vs the single-caller synchronous ``flush()`` baseline.
+
+Workload model — the paper's serving reality is many independent clients,
+each producing a *small* burst of queries per web request. Here every
+client thread submits chunks of ``client_batch`` requests and blocks on
+its tickets. The baseline is PR 1's serving mode: one caller that submits
+a chunk and synchronously drives ``flush()`` itself — it can never batch
+beyond its own chunk. The flush loop's win is cross-client coalescing:
+with T submitters, deadline-drained micro-batches approach ``max_batch``
+regardless of any single client's burst size, and the per-query kernel
+cost amortizes accordingly.
+
+Emits ``benchmarks/results/BENCH_concurrent.json`` with queries/sec and
+p50/p99 per-request latency (submit → ticket resolved) per thread count.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_concurrent [--fast]
+
+Acceptance floor (PR 2): flush-loop q/s at 16 submitter threads >= 2x the
+single-caller synchronous baseline at the same client batch size.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+RESULTS = REPO / "benchmarks" / "results"
+THREAD_COUNTS = (1, 4, 16)
+FLOOR = 2.0
+
+
+def _percentiles(lat_s):
+    lat_ms = np.asarray(lat_s) * 1e3
+    return (round(float(np.percentile(lat_ms, 50)), 3),
+            round(float(np.percentile(lat_ms, 99)), 3))
+
+
+def run(fast: bool = False, threads=THREAD_COUNTS, client_batch: int = 4,
+        total_requests: int | None = None, max_batch: int = 64,
+        flush_after_ms: float = 2.0) -> dict:
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
+
+    n = 2_000 if fast else 20_000          # paper: GO > 40k classes
+    d, k = 200, 10
+    total = total_requests or (512 if fast else 2_048)
+    rng = np.random.default_rng(0)
+
+    with tempfile.TemporaryDirectory() as td:
+        registry = EmbeddingRegistry(td)
+        ids = [f"GO:{i:07d}" for i in range(n)]
+        labels = [f"synthetic term {i}" for i in range(n)]
+        emb = rng.standard_normal((n, d)).astype(np.float32)
+        registry.publish("go", "2025-01", "transe", ids, labels, emb,
+                         ontology_checksum="bench", hyperparameters={"dim": d})
+        engine = ServingEngine(registry)
+        engine.closest_concepts("go", "transe", ids[0], k=k)   # build index
+
+        def req(r):
+            return TopKRequest("go", "transe", ids[int(r.integers(n))], k)
+
+        out = {"n_classes": n, "dim": d, "k": k,
+               "client_batch": client_batch, "max_batch": max_batch,
+               "flush_after_ms": flush_after_ms,
+               "total_requests": total, "modes": []}
+
+        # jit-warm every power-of-two bucket shape the run can hit
+        warm = BatchScheduler(engine, max_batch=max_batch)
+        b = 1
+        while b <= max_batch:
+            for _ in range(b):
+                warm.submit(req(rng))
+            warm.flush()
+            b <<= 1
+
+        # ---- baseline: single caller, synchronous flush per chunk ------ #
+        sched = BatchScheduler(engine, max_batch=max_batch)
+        r = np.random.default_rng(1)
+        lat = []
+        t0 = time.perf_counter()
+        for _ in range(total // client_batch):
+            t1 = time.perf_counter()
+            tickets = [sched.submit(req(r)) for _ in range(client_batch)]
+            res = sched.flush()
+            assert len(res) == client_batch
+            lat += [(time.perf_counter() - t1) / client_batch] * client_batch
+        sync_wall = time.perf_counter() - t0
+        sync_qps = round(total / sync_wall, 1)
+        p50, p99 = _percentiles(lat)
+        sync_row = {"mode": "sync-flush", "threads": 1, "qps": sync_qps,
+                    "p50_ms": p50, "p99_ms": p99,
+                    "wall_s": round(sync_wall, 3)}
+        out["modes"].append(sync_row)
+        print(f"  concurrent[baseline] sync flush, chunk={client_batch}: "
+              f"{sync_qps:>9,.0f} q/s  p50={p50:.3f}ms p99={p99:.3f}ms")
+
+        # ---- flush loop under T submitter threads ---------------------- #
+        for T in threads:
+            sched = BatchScheduler(engine, max_batch=max_batch,
+                                   flush_after_ms=flush_after_ms)
+            per_thread = total // (T * client_batch)
+            lat_lock = threading.Lock()
+            lat = []
+            barrier = threading.Barrier(T + 1)
+
+            def client(tix):
+                r = np.random.default_rng(100 + tix)
+                mine = []
+                barrier.wait()
+                for _ in range(per_thread):
+                    chunk = []
+                    for _ in range(client_batch):
+                        ts = time.perf_counter()
+                        chunk.append((sched.submit(req(r)), ts))
+                    for ticket, ts in chunk:
+                        ticket.result(timeout=60)
+                        mine.append(time.perf_counter() - ts)
+                with lat_lock:
+                    lat.extend(mine)
+
+            workers = [threading.Thread(target=client, args=(i,))
+                       for i in range(T)]
+            for w in workers:
+                w.start()
+            barrier.wait()
+            t0 = time.perf_counter()
+            for w in workers:
+                w.join()
+            wall = time.perf_counter() - t0
+            sched.stop()
+            n_done = T * per_thread * client_batch
+            qps = round(n_done / wall, 1)
+            p50, p99 = _percentiles(lat)
+            row = {"mode": "flush-loop", "threads": T, "qps": qps,
+                   "p50_ms": p50, "p99_ms": p99, "wall_s": round(wall, 3),
+                   "speedup_vs_sync": round(qps / sync_qps, 2),
+                   "loop_flushes": sched.stats["loop_flushes"],
+                   "full_flushes": sched.stats["full_flushes"],
+                   "deadline_flushes": sched.stats["deadline_flushes"],
+                   "batches": sched.stats["batches"]}
+            out["modes"].append(row)
+            print(f"  concurrent[loop] {T:2d} threads x chunk "
+                  f"{client_batch}: {qps:>9,.0f} q/s "
+                  f"({row['speedup_vs_sync']:.2f}x sync)  "
+                  f"p50={p50:.3f}ms p99={p99:.3f}ms  "
+                  f"({row['batches']} batches, "
+                  f"{row['full_flushes']} full / "
+                  f"{row['deadline_flushes']} deadline)")
+
+        peak_t = max(threads)
+        peak = [m for m in out["modes"]
+                if m["mode"] == "flush-loop" and m["threads"] == peak_t]
+        if peak:
+            out["peak_threads"] = peak_t
+            out["peak_speedup_vs_sync"] = peak[0]["speedup_vs_sync"]
+            # the floor metric is defined at 16 threads — never mislabel a
+            # smaller run's number under the 16-thread key
+            if peak_t == 16:
+                out["speedup_16_threads_vs_sync"] = peak[0]["speedup_vs_sync"]
+        return out
+
+
+def floor_speedup(report: dict) -> float:
+    """The floor metric: 16-thread flush-loop speedup over the sync
+    baseline (0.0 when the 16-thread mode wasn't run)."""
+    return report.get("speedup_16_threads_vs_sync", 0.0)
+
+
+def section_key(fast: bool) -> str:
+    """Fast (CI-sized) runs record under their own key so they never
+    overwrite a full-sized trajectory with smaller-n numbers."""
+    return "concurrent_fast" if fast else "concurrent"
+
+
+def write_results(report: dict) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_concurrent.json"
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            merged = {}
+    merged.update(report)
+    out.write_text(json.dumps(merged, indent=2))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized table (2k classes instead of 20k)")
+    args = ap.parse_args()
+
+    rep = run(fast=args.fast)
+    out = write_results({section_key(args.fast): rep})
+    print(f"[bench_concurrent] wrote {out}")
+
+    s16 = floor_speedup(rep)
+    status = "PASS" if s16 >= FLOOR else "FAIL"
+    print(f"[bench_concurrent] {status}: flush-loop at 16 threads = "
+          f"{s16:.2f}x the synchronous single-caller baseline "
+          f"(floor {FLOOR}x)")
+    if s16 < FLOOR:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

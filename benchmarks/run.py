@@ -17,14 +17,28 @@ corresponds to a system capability it claims:
                       bucket vs per-request top_k (benchmarks/bench_serving.py);
                       also written standalone to results/BENCH_serving.json
                       so later PRs have a perf trajectory to beat
+  B6 concurrent       flush-loop throughput + p50/p99 under 1/4/16 submitter
+                      threads vs the synchronous single-caller baseline
+                      (benchmarks/bench_concurrent.py; floor: 2x at 16
+                      threads), written to results/BENCH_concurrent.json
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--fast]
+Usage:
+    PYTHONPATH=src python -m benchmarks.run                # full benchmarks
+    PYTHONPATH=src python -m benchmarks.run --only X       # one section
+    PYTHONPATH=src python -m benchmarks.run --only X --fast  # CI-sized X
+    PYTHONPATH=src python -m benchmarks.run --fast         # repo smoke:
+        the fast test tier (pytest -m "not slow") plus the 16-thread
+        scheduler bench bucket — hot-path regressions caught in ~2 min
+        instead of the full 5-minute suite.
+
 Roofline tables come from the dry-run artifacts: see benchmarks/report.py.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 from pathlib import Path
@@ -205,13 +219,47 @@ def bench_walks(fast: bool) -> dict:
 
 
 # ===================================================================== #
+def run_smoke() -> int:
+    """The repo smoke check: fast test tier + one scheduler bench bucket.
+
+    Catches hot-path (serving/scheduler/kernel) regressions in ~2 minutes;
+    the full suite and full benchmarks stay the tier-2 gate.
+    """
+    print("[smoke] fast test tier: pytest -m 'not slow'")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + ":" + env.get("PYTHONPATH", "")
+    t0 = time.perf_counter()
+    tests = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow"],
+        cwd=REPO, env=env)
+    print(f"[smoke] tests done in {time.perf_counter() - t0:.0f}s "
+          f"(exit {tests.returncode})")
+    print("[smoke] scheduler bench bucket: 16-thread flush loop vs sync")
+    from benchmarks.bench_concurrent import (FLOOR, floor_speedup,
+                                             run as bench_conc_run,
+                                             section_key, write_results)
+    rep = bench_conc_run(fast=True, threads=(16,))
+    write_results({section_key(True) + "_smoke": rep})
+    s16 = floor_speedup(rep)
+    ok = tests.returncode == 0 and s16 >= FLOOR
+    print(f"[smoke] {'PASS' if ok else 'FAIL'}: tests "
+          f"exit={tests.returncode}, 16-thread speedup={s16:.2f}x "
+          f"(floor {FLOOR}x)")
+    return 0 if ok else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
-                    help="CI-sized inputs (default full CPU-sized)")
+                    help="with --only: CI-sized inputs; alone: repo smoke "
+                         "(fast test tier + one scheduler bench bucket)")
     ap.add_argument("--only", default=None,
-                    choices=["kge", "serving", "update", "walks", "sched"])
+                    choices=["kge", "serving", "update", "walks", "sched",
+                             "concurrent"])
     args = ap.parse_args()
+
+    if args.fast and args.only is None:
+        sys.exit(run_smoke())
 
     RESULTS.mkdir(parents=True, exist_ok=True)
     t0 = time.perf_counter()
@@ -238,6 +286,13 @@ def main():
             ref_report = bench_serving_run(fast=args.fast)
             write_results({section_key("ref", args.fast): ref_report})
             report["serving_scheduler"] = ref_report
+        if args.only in (None, "concurrent"):
+            print("[B6] concurrent flush-loop throughput")
+            from benchmarks import bench_concurrent
+            conc = bench_concurrent.run(fast=args.fast)
+            bench_concurrent.write_results(
+                {bench_concurrent.section_key(args.fast): conc})
+            report["concurrent"] = conc
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

@@ -2,13 +2,15 @@
 from .provenance import prov_record, validate_prov
 from .registry import EmbeddingRegistry
 from .serving import (BatchScheduler, ClosestConcept, EmbeddingIndex,
-                      LRUIndexCache, ServingEngine, TopKRequest)
+                      LRUIndexCache, SchedulerError, ServingEngine, Ticket,
+                      TopKRequest)
 from .updater import (PAPER_MODELS, FileReleaseChannel, ReleaseChannel,
                       UpdateReport, Updater, poll_loop)
 
 __all__ = [
     "prov_record", "validate_prov", "EmbeddingRegistry",
     "BatchScheduler", "ClosestConcept", "EmbeddingIndex", "LRUIndexCache",
-    "ServingEngine", "TopKRequest", "PAPER_MODELS", "FileReleaseChannel",
+    "SchedulerError", "ServingEngine", "Ticket", "TopKRequest",
+    "PAPER_MODELS", "FileReleaseChannel",
     "ReleaseChannel", "UpdateReport", "Updater", "poll_loop",
 ]

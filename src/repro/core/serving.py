@@ -29,18 +29,31 @@ Architecture (PR 1 hardening — see ROADMAP.md "Serving architecture"):
                        in-flight queries pinned to the old version finish
                        consistently while new queries see the new release.
 
-  ``BatchScheduler``   groups concurrent top-k requests into micro-batches
-                       per (ontology, model, version, k) with monotonically
-                       increasing ticket IDs (never reset, so outstanding
-                       tickets can't collide across flushes) and pads each
-                       micro-batch to a power-of-two bucket so the kernel
-                       retraces at most ~log2(max_batch) query shapes.
+  ``BatchScheduler``   the concurrent serving runtime (PR 2). ``submit``
+                       returns a future-style ``Ticket``; a daemon flush
+                       loop drains per-(ontology, model, version, k) queues
+                       under a deadline policy — a queue flushes when its
+                       oldest request has waited ``flush_after_ms`` OR it
+                       reaches ``max_batch``, whichever comes first — so
+                       many independent clients get cross-client batching
+                       without any of them driving ``flush()`` themselves.
+                       Ticket IDs stay monotonic (never reset), micro-
+                       batches pad to power-of-two buckets, and a failed
+                       request rejects only its own ticket.
+
+  Device sharding      when built with a multi-device mesh, the index lays
+                       its (N, d) table out ``P("data", None)`` across
+                       devices and top-k runs through the sharded
+                       kernel path (``kernels.ops.topk_cosine_sharded``):
+                       local top-k per shard + global merge.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import threading
+import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -87,7 +100,7 @@ class EmbeddingIndex:
 
     def __init__(self, entity_ids: Sequence[str], labels: Sequence[str],
                  embeddings: np.ndarray, url_prefix: str = "https://bio.kgvec2go.org/concept/",
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None, mesh=None):
         self.entity_ids = list(entity_ids)
         self.labels = list(labels)
         self.url_prefix = url_prefix
@@ -97,9 +110,19 @@ class EmbeddingIndex:
         norms = np.linalg.norm(emb, axis=1, keepdims=True)
         self.embeddings = emb
         self.unit = emb / np.maximum(norms, 1e-12)
+        from ..kernels import ops as kops
+        # only shard when the mesh actually has >1 device on the data axis;
+        # otherwise the single-device fast path below is strictly better
+        self.mesh = mesh if kops.mesh_data_shards(mesh) > 1 else None
         # device-resident copy of the immutable table: converting (N, d)
         # per top-k call would dominate the serving hot path at paper scale
-        self._unit_jnp = jnp.asarray(self.unit)
+        if self.mesh is not None:
+            # laid out P("data", None): each device holds an (N/devices, d)
+            # row block; top-k goes through the sharded local+merge path
+            self._unit_jnp, self._n_real = kops.shard_table(self.unit, self.mesh)
+        else:
+            self._unit_jnp = jnp.asarray(self.unit)
+            self._n_real = emb.shape[0]
         self._id_to_row = {i: r for r, i in enumerate(self.entity_ids)}
         self._label_to_row: Dict[str, int] = {}
         for r, lbl in enumerate(self.labels):
@@ -194,9 +217,15 @@ class EmbeddingIndex:
         qvec = self.unit[rows]                                  # (Q, d)
         excl = rows if exclude_self else np.full(len(rows), -1, np.int32)
         from ..kernels import ops as kops
-        scores, idx, valid = kops.topk_cosine(
-            jnp.asarray(qvec), self._unit_jnp, int(k),
-            exclude_rows=jnp.asarray(excl), use_pallas=self.use_pallas)
+        if self.mesh is not None:
+            scores, idx, valid = kops.topk_cosine_sharded(
+                jnp.asarray(qvec), self._unit_jnp, int(k),
+                exclude_rows=jnp.asarray(excl), mesh=self.mesh,
+                n_valid=self._n_real, use_pallas=self.use_pallas)
+        else:
+            scores, idx, valid = kops.topk_cosine(
+                jnp.asarray(qvec), self._unit_jnp, int(k),
+                exclude_rows=jnp.asarray(excl), use_pallas=self.use_pallas)
         scores, idx, valid = np.asarray(scores), np.asarray(idx), np.asarray(valid)
         out: List[List[ClosestConcept]] = []
         for qi in range(len(rows)):
@@ -276,10 +305,13 @@ class ServingEngine:
     """
 
     def __init__(self, registry: EmbeddingRegistry, cache_capacity: int = 8,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None, mesh=None):
         self.registry = registry
         self.cache = LRUIndexCache(cache_capacity)
         self.use_pallas = use_pallas
+        #: optional jax Mesh with a "data" axis — indices built by this
+        #: engine shard their tables across it (see EmbeddingIndex)
+        self.mesh = mesh
         self._latest: Dict[str, str] = {}
         self._lock = threading.Lock()
 
@@ -303,7 +335,8 @@ class ServingEngine:
         idx = self.cache.get(key)
         if idx is None:
             ids, labels, emb, _ = self.registry.get(ontology, model, version)
-            idx = EmbeddingIndex(ids, labels, emb, use_pallas=self.use_pallas)
+            idx = EmbeddingIndex(ids, labels, emb, use_pallas=self.use_pallas,
+                                 mesh=self.mesh)
             self.cache.put(key, idx)
         return idx
 
@@ -374,47 +407,165 @@ def _bucket_size(n: int, max_batch: int) -> int:
     return min(b, max_batch)
 
 
-class BatchScheduler:
-    """Groups concurrent top-k requests into micro-batched kernel calls.
+class SchedulerError(RuntimeError):
+    """Raised by ``Ticket.result()`` when the request failed (unknown
+    query/ontology/model/version, bad k, or a kernel error)."""
 
-    Replaces the seed's ``RequestBatcher`` with production semantics:
+
+@functools.total_ordering
+class Ticket:
+    """Future-style handle for one submitted top-k request.
+
+    Resolved exactly once, by whichever flush (background loop or a manual
+    ``flush()``) executes its batch. Interoperates with plain ints — hash,
+    equality and ordering go through ``id`` — so the ticket-id-keyed dicts
+    returned by ``flush()`` and ``scheduler.errors`` accept Ticket objects
+    directly as keys.
+    """
+
+    __slots__ = ("id", "version", "_event", "_result", "_error")
+
+    def __init__(self, tid: int, version: Optional[str] = None):
+        self.id = tid
+        #: serving version pinned at submit time (None if submit failed
+        #: before the version could be resolved)
+        self.version = version
+        self._event = threading.Event()
+        self._result: Optional[List[ClosestConcept]] = None
+        self._error: Optional[str] = None
+
+    # --------------------------- future API ---------------------------- #
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> List[ClosestConcept]:
+        """Block until resolved; raises SchedulerError if the request
+        failed, TimeoutError if unresolved after ``timeout`` seconds."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"ticket {self.id} unresolved after {timeout}s")
+        if self._error is not None:
+            raise SchedulerError(self._error)
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[str]:
+        """Block until resolved; the error message, or None on success."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"ticket {self.id} unresolved after {timeout}s")
+        return self._error
+
+    # --------------------- scheduler-internal ----------------------- #
+    def _resolve(self, result: List[ClosestConcept]) -> bool:
+        """Returns False if the ticket was already resolved (never expected;
+        the stress suite asserts the resolved counter stays exact)."""
+        if self._event.is_set():
+            return False
+        self._result = result
+        self._event.set()
+        return True
+
+    def _reject(self, message: str) -> bool:
+        if self._event.is_set():
+            return False
+        self._error = message
+        self._event.set()
+        return True
+
+    # ---------------------------- int interop --------------------------- #
+    def __int__(self) -> int:
+        return self.id
+
+    __index__ = __int__
+
+    def __hash__(self) -> int:
+        return hash(self.id)
+
+    def __eq__(self, other):
+        if isinstance(other, Ticket):
+            return self.id == other.id
+        if isinstance(other, int):
+            return self.id == other
+        return NotImplemented
+
+    def __lt__(self, other):
+        if isinstance(other, Ticket):
+            return self.id < other.id
+        if isinstance(other, int):
+            return self.id < other
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        if not self.done():
+            state = "pending"
+        else:
+            state = "failed" if self._error is not None else "done"
+        return f"Ticket({self.id}, {state})"
+
+
+class BatchScheduler:
+    """The concurrent serving runtime: groups top-k requests from many
+    client threads into micro-batched kernel calls.
+
+    ``submit`` returns a future-style ``Ticket``; results come back either
+    through the background flush loop (``flush_after_ms``/``start``) with
+    clients blocking on ``ticket.result()``, or through a caller-driven
+    synchronous ``flush()`` — both resolve every drained ticket exactly
+    once. Semantics:
 
       * **monotonic tickets** — one global ``itertools.count``, never reset,
-        so tickets held across flushes can't collide with new submissions
-        (the old batcher restarted at 0 every flush);
+        so tickets held across flushes can't collide with new submissions;
       * **version pinning at submit** — each request resolves its serving
         version when enqueued, so an update landing between submit and
         flush doesn't change what an in-flight request sees;
       * **per-(ontology, model, version, k) queues** — each flushes as one
         or more batched kernel calls;
+      * **deadline policy** — with the flush loop running, a queue is
+        drained when its oldest request has waited ``flush_after_ms`` OR
+        the queue has reached ``max_batch`` queries, whichever comes
+        first: full batches flush immediately, stragglers wait at most one
+        deadline;
       * **power-of-two padding buckets** — micro-batches are padded up to
         the next power of two (≤ max_batch) by repeating the last query, so
         the jitted kernel sees at most ~log2(max_batch) distinct Q shapes
         instead of one per batch size;
-      * **poison isolation** — an unknown query fails only its own ticket
-        (recorded in ``errors``), not the whole batch.
+      * **poison isolation** — a failed request (unknown query, broken
+        queue, kernel error) rejects only its own ticket (recorded in
+        ``errors``), never the whole batch.
     """
 
     def __init__(self, engine: ServingEngine, max_batch: int = 64,
-                 max_errors: int = 1024):
+                 max_errors: int = 1024,
+                 flush_after_ms: Optional[float] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if flush_after_ms is not None and flush_after_ms < 0:
+            raise ValueError(f"flush_after_ms must be >= 0, got {flush_after_ms}")
         self.engine = engine
         # buckets are powers of two capped at the caller's exact max_batch
         # (the cap bounds kernel batch memory; a non-power-of-two max_batch
         # costs at most one extra jitted shape for full batches)
         self.max_batch = max_batch
         self.max_errors = max_errors
+        self.flush_after_ms = flush_after_ms
         self._tickets = itertools.count()
         self._queues: Dict[Tuple[str, str, str, int],
-                           List[Tuple[int, TopKRequest]]] = {}
+                           List[Tuple[Ticket, TopKRequest]]] = {}
+        #: first-enqueue monotonic time per live queue (deadline anchor)
+        self._born: Dict[Tuple[str, str, str, int], float] = {}
         self._lock = threading.Lock()
-        #: ticket -> error message for the most recent failed requests
+        self._cond = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+        #: ticket id -> error message for the most recent failed requests
         #: (bounded at ``max_errors``: oldest entries are dropped)
         self.errors: Dict[int, str] = {}
-        self.stats = {"submitted": 0, "flushes": 0, "batches": 0,
+        self.stats = {"submitted": 0, "resolved": 0, "flushes": 0,
+                      "loop_flushes": 0, "deadline_flushes": 0,
+                      "full_flushes": 0, "batches": 0,
                       "padded_queries": 0, "failed": 0}
+        if flush_after_ms is not None:
+            self.start()
 
+    # ------------------------------ intake ------------------------------ #
     def _record_errors(self, errors: Dict[int, str]) -> None:
         """Merge under lock, keeping only the most recent max_errors."""
         self.errors.update(errors)
@@ -422,32 +573,68 @@ class BatchScheduler:
         while len(self.errors) > self.max_errors:
             self.errors.pop(next(iter(self.errors)))
 
-    def submit(self, req: TopKRequest) -> int:
+    def _reject_at_submit(self, ticket: Ticket, msg: str) -> Ticket:
         with self._lock:
-            ticket = next(self._tickets)
+            self._record_errors({ticket.id: msg})
+            if ticket._reject(msg):
+                self.stats["resolved"] += 1
+        return ticket
+
+    def submit(self, req: TopKRequest) -> Ticket:
+        with self._lock:
+            tid = next(self._tickets)
             self.stats["submitted"] += 1
         try:
             version = req.version or self.engine.latest_version(req.ontology)
-        except KeyError as e:
-            # unknown ontology fails only this ticket, not the accept loop
-            with self._lock:
-                self._record_errors({ticket: str(e)})
-            return ticket
-        with self._lock:
-            self._queues.setdefault(
-                (req.ontology, req.model, version, req.k), []).append((ticket, req))
+        except Exception as e:
+            # unknown ontology — or any registry fault — fails only this
+            # ticket, not the accept loop (and keeps resolved == submitted)
+            return self._reject_at_submit(Ticket(tid), str(e))
+        ticket = Ticket(tid, version=version)
+        key = (req.ontology, req.model, version, req.k)
+        with self._cond:
+            if self._stopping:
+                stopped = True       # reject outside the lock hold below
+            else:
+                stopped = False
+                q = self._queues.setdefault(key, [])
+                q.append((ticket, req))
+                self._born.setdefault(key, time.monotonic())
+                # wake the loop for a brand-new deadline or a full batch; a
+                # queue that's merely growing keeps its existing wake-up time
+                if self._thread is not None and (
+                        len(q) == 1 or len(q) >= self.max_batch):
+                    self._cond.notify()
+        if stopped:
+            # after stop() nothing drains the queues: enqueueing would
+            # strand the ticket forever, so refuse it (executor-shutdown
+            # semantics; start() re-opens intake)
+            return self._reject_at_submit(ticket, "scheduler is stopped")
         return ticket
 
     def pending(self) -> int:
         with self._lock:
             return sum(len(v) for v in self._queues.values())
 
-    def flush(self) -> Dict[int, List[ClosestConcept]]:
-        with self._lock:
-            queues, self._queues = self._queues, {}
+    # ----------------------------- execution ---------------------------- #
+    def _run_queues(self, queues: Dict[Tuple[str, str, str, int],
+                                       List[Tuple[Ticket, TopKRequest]]],
+                    collect: bool = True) -> Dict[int, List[ClosestConcept]]:
+        """Execute drained queues (no scheduler lock held): batch, call the
+        kernel, resolve every ticket exactly once. Returns {ticket id:
+        result} for the successful tickets — unless ``collect`` is False
+        (the background loop's path, where clients read their Tickets and
+        the dict would be allocated only to be discarded)."""
         results: Dict[int, List[ClosestConcept]] = {}
         errors: Dict[int, str] = {}
-        n_batches = n_padded = 0
+        n_batches = n_padded = n_resolved = 0
+
+        def reject(ticket: Ticket, msg: str) -> None:
+            nonlocal n_resolved
+            if ticket._reject(msg):
+                errors[ticket.id] = msg
+                n_resolved += 1
+
         for (ont, model, version, k), items in queues.items():
             # a broken queue (unpublished model, bad version, k < 1) fails
             # only its own tickets — other queues in this flush still serve
@@ -455,35 +642,178 @@ class BatchScheduler:
                 index = self.engine._index(ont, model, version)
             except Exception as e:
                 for ticket, _ in items:
-                    errors[ticket] = str(e)
+                    reject(ticket, str(e))
                 continue
-            for start in range(0, len(items), self.max_batch):
-                chunk = items[start:start + self.max_batch]
-                live: List[Tuple[int, int]] = []        # (ticket, row)
-                for ticket, req in chunk:
-                    row = index.resolve(req.query)
-                    if row is None:
-                        errors[ticket] = f"unknown class {req.query!r}"
-                    else:
-                        live.append((ticket, row))
-                if not live:
-                    continue
-                rows = [r for _, r in live]
-                bucket = _bucket_size(len(rows), self.max_batch)
-                pad = bucket - len(rows)
-                try:
-                    batch_res = index.top_k_rows(rows + [rows[-1]] * pad, k)
-                except Exception as e:
-                    for ticket, _ in live:
-                        errors[ticket] = str(e)
-                    continue
-                for (ticket, _), res in zip(live, batch_res):
-                    results[ticket] = res
-                n_batches += 1
-                n_padded += pad
+            try:
+                for start in range(0, len(items), self.max_batch):
+                    chunk = items[start:start + self.max_batch]
+                    live: List[Tuple[Ticket, int]] = []     # (ticket, row)
+                    for ticket, req in chunk:
+                        # a malformed query (e.g. None) fails alone too
+                        try:
+                            row = index.resolve(req.query)
+                        except Exception as e:
+                            reject(ticket, f"bad query {req.query!r}: {e}")
+                            continue
+                        if row is None:
+                            reject(ticket, f"unknown class {req.query!r}")
+                        else:
+                            live.append((ticket, row))
+                    if not live:
+                        continue
+                    rows = [r for _, r in live]
+                    bucket = _bucket_size(len(rows), self.max_batch)
+                    pad = bucket - len(rows)
+                    try:
+                        batch_res = index.top_k_rows(rows + [rows[-1]] * pad, k)
+                    except Exception as e:
+                        for ticket, _ in live:
+                            reject(ticket, str(e))
+                        continue
+                    for (ticket, _), res in zip(live, batch_res):
+                        if collect:
+                            results[ticket.id] = res
+                        if ticket._resolve(res):
+                            n_resolved += 1
+                    n_batches += 1
+                    n_padded += pad
+            except Exception as e:
+                # anything unexpected rejects this queue's still-pending
+                # tickets instead of escaping into the drainer
+                for ticket, _ in items:
+                    reject(ticket, f"scheduler internal error: {e}")
         with self._lock:
             self._record_errors(errors)
-            self.stats["flushes"] += 1
             self.stats["batches"] += n_batches
             self.stats["padded_queries"] += n_padded
+            self.stats["resolved"] += n_resolved
         return results
+
+    def _drain(self, queues, collect: bool = True
+               ) -> Dict[int, List[ClosestConcept]]:
+        """_run_queues with a last-resort guard: a bug in batch execution
+        must reject the drained tickets, never strand them (queues are
+        already popped — there is no requeue) or kill the flush loop."""
+        try:
+            return self._run_queues(queues, collect=collect)
+        except Exception as e:
+            msg = f"scheduler internal error: {e}"
+            dropped: Dict[int, str] = {}
+            for items in queues.values():
+                for ticket, _ in items:
+                    if ticket._reject(msg):
+                        dropped[ticket.id] = msg
+            with self._lock:
+                self._record_errors(dropped)
+                self.stats["resolved"] += len(dropped)
+            return {}
+
+    def flush(self) -> Dict[int, List[ClosestConcept]]:
+        """Synchronously drain and execute everything pending. Coexists
+        with the flush loop: each queue is popped under the lock, so a
+        ticket is only ever executed (and resolved) by one drainer."""
+        with self._lock:
+            queues, self._queues = self._queues, {}
+            self._born.clear()
+        results = self._drain(queues)
+        with self._lock:
+            self.stats["flushes"] += 1
+        return results
+
+    # ----------------------------- flush loop --------------------------- #
+    def start(self, flush_after_ms: Optional[float] = None) -> None:
+        """Start the daemon flush loop (idempotent while running)."""
+        if flush_after_ms is not None:
+            self.flush_after_ms = flush_after_ms
+        if self.flush_after_ms is None:
+            raise ValueError("flush_after_ms is required to start the loop")
+        with self._cond:
+            if self._thread is not None and self._thread.is_alive():
+                # idempotent while running — and after a timed-out stop()
+                # this re-adopts the still-draining loop: clearing
+                # _stopping reopens intake and the thread resumes serving
+                self._stopping = False
+                self._cond.notify_all()
+                return
+            self._stopping = False
+            self._thread = threading.Thread(
+                target=self._loop, name="BatchScheduler-flush", daemon=True)
+            self._thread.start()
+
+    def stop(self, drain: bool = True, timeout: float = 60.0) -> None:
+        """Stop the loop; by default drain what's still queued so every
+        outstanding ticket resolves before this returns. Raises
+        RuntimeError if an in-flight drain doesn't finish within
+        ``timeout`` — the guarantee would be silently broken otherwise."""
+        with self._cond:
+            thread, self._thread = self._thread, None
+            self._stopping = True
+            self._cond.notify_all()
+        if thread is not None:
+            thread.join(timeout)
+            if thread.is_alive():
+                with self._lock:
+                    if self._thread is None:     # don't clobber a racing
+                        self._thread = thread    # start()'s fresh loop
+                raise RuntimeError(
+                    f"flush loop still draining after {timeout}s")
+        if drain:
+            self.flush()
+
+    def running(self) -> bool:
+        with self._lock:
+            return self._thread is not None and self._thread.is_alive()
+
+    def __enter__(self) -> "BatchScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _due_keys(self, now: float, period_s: float) -> List[
+            Tuple[str, str, str, int]]:
+        """Queues past their deadline or at/over max_batch (lock held)."""
+        return [key for key, born in self._born.items()
+                if now - born >= period_s
+                or len(self._queues[key]) >= self.max_batch]
+
+    def _loop(self) -> None:
+        # a loop thread serves only while it is the *registered* thread:
+        # stop() deregisters (sets _thread None/new), and a stale thread
+        # that wakes later exits instead of racing a replacement loop
+        me = threading.current_thread()
+        while True:
+            take: Dict[Tuple[str, str, str, int],
+                       List[Tuple[Ticket, TopKRequest]]] = {}
+            with self._cond:
+                while not self._stopping and self._thread is me:
+                    # re-read the deadline each pass: start(flush_after_ms=)
+                    # on a running loop takes effect immediately
+                    period_s = self.flush_after_ms / 1e3
+                    due = self._due_keys(time.monotonic(), period_s)
+                    if due:
+                        break
+                    if self._born:
+                        # sleep until the earliest queue's deadline; a
+                        # submit that fills a batch (or opens a queue with
+                        # an earlier deadline) notifies us awake sooner
+                        timeout = max(
+                            0.0, min(self._born.values()) + period_s
+                            - time.monotonic())
+                        self._cond.wait(timeout=timeout)
+                    else:
+                        self._cond.wait()
+                if self._stopping or self._thread is not me:
+                    return
+                n_full = 0
+                for key in due:
+                    items = self._queues.pop(key)
+                    self._born.pop(key, None)
+                    take[key] = items
+                    n_full += len(items) >= self.max_batch
+            self._drain(take, collect=False)
+            with self._lock:
+                self.stats["loop_flushes"] += 1
+                self.stats["full_flushes"] += n_full
+                self.stats["deadline_flushes"] += len(take) - n_full
+

@@ -8,11 +8,14 @@ the same call sites run the compiled kernels with interpret=False.
 """
 from __future__ import annotations
 
+import functools
 import os
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from . import ref
 from .kge_score import kge_score_pallas
@@ -44,6 +47,123 @@ def topk_cosine(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
                                   exclude_rows=exclude_rows,
                                   block_n=block_n, interpret=_INTERPRET)
     return ref.topk_cosine_ref(q_unit, e_unit, k, exclude_rows=exclude_rows)
+
+
+def mesh_data_shards(mesh, axis: str = "data") -> int:
+    """Number of table shards a mesh provides (1 = no sharding)."""
+    if mesh is None:
+        return 1
+    return int(dict(mesh.shape).get(axis, 1))
+
+
+def shard_table(e_unit: jnp.ndarray, mesh, axis: str = "data"
+                ) -> Tuple[jnp.ndarray, int]:
+    """Lay an (N, d) table out ``P(axis, None)`` across the mesh devices.
+
+    N is zero-padded to a multiple of the axis size (shard_map needs even
+    row blocks); returns ``(sharded table, n_valid)`` where ``n_valid`` is
+    the real row count — pass both to :func:`topk_cosine_sharded`.
+    """
+    shards = mesh_data_shards(mesh, axis)
+    e = jnp.asarray(e_unit, jnp.float32)
+    pad = -e.shape[0] % shards
+    if pad:
+        e = jnp.concatenate([e, jnp.zeros((pad, e.shape[1]), e.dtype)], axis=0)
+    return jax.device_put(e, NamedSharding(mesh, P(axis, None))), int(e_unit.shape[0])
+
+
+@functools.lru_cache(maxsize=128)
+def _sharded_topk_fn(mesh, axis: str, n_real: int, n_total: int, k: int,
+                     use_pallas: bool, interpret: bool):
+    """Build (and cache) the jitted sharded top-k for one table layout.
+
+    Each shard runs the existing single-device kernel contract on its
+    (local_n, d) row block — global ``exclude_rows`` are translated to
+    shard-local coordinates (−1 when the excluded row lives elsewhere) —
+    then a global merge top-k's the gathered shard candidates.
+
+    Shard-merge invariants:
+      * local fetch depth is ``min(k + n_pad, local_n)``: the zero rows
+        padding N up to a shard multiple can occupy at most ``n_pad``
+        local top-k slots (all in the last shard), so fetching that many
+        extras guarantees every global top-k row survives its shard;
+      * pad candidates (global index >= n_real) are masked to −inf after
+        the local top-k, never surfaced;
+      * ``valid`` is computed globally — min(k', N − excluded) with
+        k' = min(k, N) — identical to the single-device contract.
+    """
+    shards = mesh_data_shards(mesh, axis)
+    local_n = n_total // shards
+    n_pad = n_total - n_real
+    k_c = min(k, n_real)
+    k_fetch = min(k + n_pad, local_n)
+
+    def local_topk(q, e_loc, excl):
+        off = jax.lax.axis_index(axis).astype(jnp.int32) * local_n
+        loc = jnp.where((excl >= off) & (excl < off + local_n),
+                        excl - off, -1).astype(jnp.int32)
+        if use_pallas:
+            block_n = min(1024, max(128, local_n))
+            s, i, _ = topk_cosine_pallas(q, e_loc, k_fetch, exclude_rows=loc,
+                                         block_n=block_n, interpret=interpret)
+        else:
+            s, i, _ = ref.topk_cosine_ref(q, e_loc, k_fetch, exclude_rows=loc)
+        gi = i + off
+        s = jnp.where(gi < n_real, s, ref.NEG_INF)
+        return s, gi
+
+    # check_rep=False: pallas_call has no replication rule yet, and the
+    # outputs are explicitly sharded over ``axis`` anyway
+    mapped = shard_map(local_topk, mesh=mesh,
+                       in_specs=(P(None, None), P(axis, None), P(None)),
+                       out_specs=(P(None, axis), P(None, axis)),
+                       check_rep=False)
+
+    @jax.jit
+    def run(q, e, excl):
+        cand_s, cand_i = mapped(q, e, excl)      # (Q, shards * k_fetch)
+        s, pos = jax.lax.top_k(cand_s, k_c)
+        i = jnp.take_along_axis(cand_i, pos, axis=1)
+        excluded = ((excl >= 0) & (excl < n_real)).astype(jnp.int32)
+        valid = jnp.minimum(k_c, n_real - excluded)
+        return s, i, valid
+
+    return run
+
+
+def topk_cosine_sharded(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
+                        exclude_rows: Optional[jnp.ndarray] = None,
+                        mesh=None, axis: str = "data",
+                        n_valid: Optional[int] = None,
+                        use_pallas: Optional[bool] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-sharded :func:`topk_cosine`: the (N, d) table is split in row
+    blocks across the mesh's ``axis`` devices, each shard computes a local
+    top-k via the single-device kernel contract, and a final merge reduces
+    shard candidates to the global top-k.
+
+    ``e_unit`` may carry zero-row padding (``n_valid`` = real rows; use
+    :func:`shard_table` to lay the table out). Falls back to the
+    single-device path — bit-identical contract — when the mesh has one
+    device (or none) on ``axis``.
+    """
+    n_total = e_unit.shape[0]
+    n_real = n_total if n_valid is None else int(n_valid)
+    shards = mesh_data_shards(mesh, axis)
+    if shards <= 1:
+        return topk_cosine(q_unit, e_unit[:n_real], k,
+                           exclude_rows=exclude_rows, use_pallas=use_pallas)
+    if n_total % shards:
+        raise ValueError(
+            f"table rows ({n_total}) must divide the {axis!r} axis "
+            f"({shards}); lay the table out with shard_table()")
+    qn = q_unit.shape[0]
+    if exclude_rows is None:
+        exclude_rows = jnp.full((qn,), -1, jnp.int32)
+    run = _sharded_topk_fn(mesh, axis, n_real, n_total, int(k),
+                           _use_pallas(flag=use_pallas), _INTERPRET)
+    return run(q_unit.astype(jnp.float32), e_unit,
+               jnp.asarray(exclude_rows, jnp.int32))
 
 
 def kge_score(h, r, t, neg, corrupt_head, model: str = "transe_l1",

@@ -19,3 +19,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests on CPU)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(min_devices: int = 2):
+    """1-D ("data",) mesh over all local devices for the sharded serving
+    top-k path (embedding tables laid out P("data", None); see
+    kernels.ops.topk_cosine_sharded). Returns None when fewer than
+    ``min_devices`` are available — the caller then uses the unchanged
+    single-device path."""
+    n = jax.device_count()
+    if n < min_devices:
+        return None
+    return jax.make_mesh((n,), ("data",))

@@ -1,20 +1,25 @@
 """Serving launcher — the paper's deployment mode.
 
 Stands up the Bio-KGvec2go serving engine over a registry (training the
-snapshots first if the registry is empty), then runs a batched request
-session against the three endpoints and reports latency:
+snapshots first if the registry is empty), then runs a concurrent request
+session against the three endpoints and reports latency: ``--threads``
+client threads submit future-style tickets that the BatchScheduler's
+background flush loop resolves under its deadline policy
+(``--flush-after-ms`` or a full ``--batch``, whichever first). With more
+than one jax device, the embedding table is sharded P("data", None)
+across them and top-k runs through the sharded local+merge kernel path.
 
     PYTHONPATH=src python -m repro.launch.serve --registry /tmp/biokg \
-        --requests 200 --batch 32
+        --requests 200 --batch 32 --threads 8 --flush-after-ms 2
 
 The Flask/Apache layer of the paper is a thin HTTP shim over exactly these
 calls (see DESIGN.md §8); this driver exercises the same engine the way the
-production WSGI worker would.
+production WSGI workers would — many independent clients, one scheduler.
 """
 from __future__ import annotations
 
 import argparse
-import json
+import threading
 import time
 
 import numpy as np
@@ -28,11 +33,18 @@ def main():
     ap.add_argument("--requests", type=int, default=200)
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--threads", type=int, default=8,
+                    help="concurrent client threads")
+    ap.add_argument("--flush-after-ms", type=float, default=2.0,
+                    help="flush-loop deadline")
+    ap.add_argument("--no-shard", action="store_true",
+                    help="force the single-device path even on multi-device")
     ap.add_argument("--train-if-missing", action="store_true", default=True)
     args = ap.parse_args()
 
     from repro.core.registry import EmbeddingRegistry
     from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
+    from .mesh import make_serving_mesh
 
     registry = EmbeddingRegistry(args.registry)
     if not registry.versions(args.ontology):
@@ -40,10 +52,12 @@ def main():
         from .train import train_kge
         train_kge(args.ontology, args.registry, steps=150, n_terms=800)
 
-    engine = ServingEngine(registry)
+    mesh = None if args.no_shard else make_serving_mesh()
+    engine = ServingEngine(registry, mesh=mesh)
     ids, labels, emb, meta = registry.get(args.ontology, args.model)
     print(f"[serve] {args.ontology}/{meta['version']}/{args.model}: "
-          f"{len(ids)} classes, dim={meta['dim']}")
+          f"{len(ids)} classes, dim={meta['dim']}, "
+          f"{'sharded over ' + str(mesh.devices.size) + ' devices' if mesh else 'single device'}")
 
     rng = np.random.default_rng(0)
 
@@ -64,22 +78,48 @@ def main():
     print(f"[serve] similarity: p50={np.percentile(lat,50):.3f}ms "
           f"p99={np.percentile(lat,99):.3f}ms over {args.requests} requests")
 
-    # -- endpoint 3: top-k closest, batched ------------------------------ #
-    sched = BatchScheduler(engine, max_batch=args.batch)
-    t0 = time.perf_counter()
-    tickets = [sched.submit(TopKRequest(args.ontology, args.model,
-                                        ids[int(i)], args.k))
-               for i in rng.integers(0, len(ids), args.requests)]
-    results = sched.flush()
-    dt = time.perf_counter() - t0
-    print(f"[serve] top-{args.k}: {args.requests} requests in {dt:.2f}s "
-          f"({args.requests/dt:.0f} req/s batched; "
+    # -- endpoint 3: top-k closest, concurrent clients + flush loop ------ #
+    queries = [ids[int(i)] for i in rng.integers(0, len(ids), args.requests)]
+    chunks = [queries[i::args.threads] for i in range(args.threads)]
+    lat, lat_lock = [], threading.Lock()
+    sample = {}
+
+    def client(cid, mine):
+        out = []
+        for q in mine:
+            t1 = time.perf_counter()
+            ticket = sched.submit(TopKRequest(args.ontology, args.model,
+                                              q, args.k))
+            res = ticket.result(timeout=60)
+            out.append(time.perf_counter() - t1)
+            if cid == 0 and not sample:
+                sample[0] = res
+        with lat_lock:
+            lat.extend(out)
+
+    with BatchScheduler(engine, max_batch=args.batch,
+                        flush_after_ms=args.flush_after_ms) as sched:
+        t0 = time.perf_counter()
+        workers = [threading.Thread(target=client, args=(i, c))
+                   for i, c in enumerate(chunks)]
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        dt = time.perf_counter() - t0
+    lat_ms = np.array(lat) * 1e3
+    print(f"[serve] top-{args.k}: {args.requests} requests from "
+          f"{args.threads} clients in {dt:.2f}s "
+          f"({args.requests/dt:.0f} req/s; "
           f"{sched.stats['batches']} micro-batches, "
+          f"{sched.stats['full_flushes']} full / "
+          f"{sched.stats['deadline_flushes']} deadline flushes, "
           f"{sched.stats['padded_queries']} padded) "
+          f"p50={np.percentile(lat_ms,50):.2f}ms "
+          f"p99={np.percentile(lat_ms,99):.2f}ms "
           f"cache={engine.cache_stats()}")
-    sample = results[tickets[0]]
     print("[serve] sample result:")
-    for c in sample[:3]:
+    for c in sample[0][:3]:
         print(f"    {c.identifier:12s} {c.score:.4f}  {c.label[:40]}  {c.url}")
 
 

@@ -15,6 +15,9 @@ import pytest
 
 from repro.models import ARCH_IDS, build, get_config
 
+# LM-zoo/trainer tests: tier-2 only (run with plain `pytest`)
+pytestmark = pytest.mark.slow
+
 TOL = dict(rtol=2e-3, atol=2e-3)
 
 

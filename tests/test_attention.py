@@ -7,6 +7,9 @@ import pytest
 from repro.models.attention import (chunked_attention, decode_attention,
                                     plain_attention, swa_attention)
 
+# LM attention tests: tier-2 only (run with plain `pytest`)
+pytestmark = pytest.mark.slow
+
 
 def _rand(key, *shape):
     return jax.random.normal(key, shape, jnp.float32)

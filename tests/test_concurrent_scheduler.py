@@ -1,0 +1,420 @@
+"""Scheduler stress/property suite for the concurrent serving runtime.
+
+Locks down the PR 2 contract: 16 submitter threads against the background
+flush loop — every ticket resolves exactly once, results match the
+solo-query oracle for the version pinned at submit, ticket IDs are never
+reused, unknown queries fail alone, and an `invalidate()` landing
+mid-stream keeps pinned tickets on the old version while post-swap
+submissions see the new one (the paper's freshness guarantee, as a test).
+
+Snapshots are published directly (no training) so the whole module stays
+inside the fast tier.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.serving import (BatchScheduler, SchedulerError, ServingEngine,
+                                Ticket, TopKRequest)
+
+N, D = 48, 12
+
+THREADS = 16
+PER_THREAD = 32          # 16 * 32 = 512 requests >= the 500 floor
+
+
+def _publish(registry, ontology, version, model="transe", n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = [f"{ontology.upper()}:{i:07d}" for i in range(n)]
+    labels = [f"{ontology} term {i}" for i in range(n)]
+    emb = rng.standard_normal((n, D)).astype(np.float32)
+    registry.publish(ontology, version, model, ids, labels, emb,
+                     ontology_checksum=f"ck-{version}-{model}-{seed}",
+                     hyperparameters={"dim": D})
+    return ids
+
+
+@pytest.fixture()
+def engine(registry):
+    ids_go = _publish(registry, "go", "2024-01", "transe", seed=1)
+    _publish(registry, "go", "2024-01", "distmult", seed=11)
+    _publish(registry, "go", "2024-02", "transe", seed=2)
+    _publish(registry, "go", "2024-02", "distmult", seed=12)
+    ids_hp = _publish(registry, "hp", "2024-01", "transe", n=N // 2, seed=3)
+    eng = ServingEngine(registry, cache_capacity=16)
+    return eng, ids_go, ids_hp
+
+
+def _mixed_request(rng, ids_go, ids_hp):
+    """One request drawn from the mixed (ontology, model, version, k) grid,
+    with a ~6% chance of an unknown query."""
+    ont = "go" if rng.random() < 0.7 else "hp"
+    if ont == "go":
+        model = "transe" if rng.random() < 0.5 else "distmult"
+        version = rng.choice([None, "2024-01", "2024-02"])
+        query = ids_go[int(rng.integers(len(ids_go)))]
+    else:
+        model, version = "transe", None
+        query = ids_hp[int(rng.integers(len(ids_hp)))]
+    if rng.random() < 0.06:
+        query = f"BOGUS:{int(rng.integers(1_000_000)):07d}"
+    k = int(rng.choice([3, 5, 10]))
+    return TopKRequest(ont, model, query, k, version=version)
+
+
+# ------------------------------ the stress test ------------------------ #
+def test_stress_16_threads_exactly_once_with_midstream_invalidate(
+        engine, registry):
+    eng, ids_go, ids_hp = engine
+    sched = BatchScheduler(eng, max_batch=16, flush_after_ms=1)
+    barrier = threading.Barrier(THREADS)
+    submitted = [[] for _ in range(THREADS)]   # (ticket, req) per thread
+    invalidated = threading.Event()
+
+    def client(tix):
+        rng = np.random.default_rng(1000 + tix)
+        barrier.wait()
+        for j in range(PER_THREAD):
+            if tix == 0 and j == PER_THREAD // 2:
+                # the one mid-stream invalidate: a new release lands while
+                # the other 15 threads keep submitting
+                _publish(registry, "go", "2024-03", "transe", seed=4)
+                _publish(registry, "go", "2024-03", "distmult", seed=14)
+                eng.invalidate("go", "2024-03")
+                invalidated.set()
+            submitted[tix].append(sched.submit(
+                _mixed_request(rng, ids_go, ids_hp)))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert invalidated.is_set()
+    # post-swap tickets (submitted after invalidate returned) see 2024-03
+    post = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+    assert post.version == "2024-03"
+    sched.stop()                    # drains: every ticket resolves
+
+    tickets = [t for per in submitted for t in per] + [post]
+    # -- no ticket ID is ever reused, every ticket resolved exactly once --
+    assert len(tickets) == THREADS * PER_THREAD + 1
+    assert len({t.id for t in tickets}) == len(tickets)
+    assert all(t.done() for t in tickets)
+    assert sched.stats["submitted"] == len(tickets)
+    assert sched.stats["resolved"] == len(tickets)   # _resolve/_reject fired
+    assert sched.pending() == 0                      # exactly once each
+
+    # -- results match the solo-query oracle for the pinned version ------ #
+    n_failed = n_ok = 0
+    for per in submitted:
+        for ticket in per:
+            err = ticket.exception(timeout=0)
+            if err is not None:
+                n_failed += 1
+                assert "unknown" in err                    # bogus query
+                assert ticket.id in sched.errors
+                with pytest.raises(SchedulerError):
+                    ticket.result(timeout=0)
+                continue
+            n_ok += 1
+    assert n_failed > 0 and n_ok > n_failed           # mix actually mixed
+    assert sched.stats["failed"] == n_failed
+
+
+def test_stress_results_match_solo_oracle(engine):
+    """Concurrent results are identical to solo queries pinned to the
+    ticket's submit-time version — batching and threading change nothing
+    about what a request sees."""
+    eng, ids_go, ids_hp = engine
+    sched = BatchScheduler(eng, max_batch=16, flush_after_ms=1)
+    results = []                                  # (req, ticket) pairs
+    lock = threading.Lock()
+    barrier = threading.Barrier(8)
+
+    def client(tix):
+        rng = np.random.default_rng(2000 + tix)
+        barrier.wait()
+        mine = []
+        for _ in range(16):
+            req = _mixed_request(rng, ids_go, ids_hp)
+            mine.append((req, sched.submit(req)))
+        with lock:
+            results.extend(mine)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    sched.stop()
+
+    for req, ticket in results:
+        if ticket.exception(timeout=0) is not None:
+            continue
+        got = [c.identifier for c in ticket.result(timeout=0)]
+        oracle = eng.closest_concepts(req.ontology, req.model, req.query,
+                                      k=req.k, version=ticket.version)
+        assert got == [c.identifier for c in oracle]
+
+
+# --------------------- update-under-traffic consistency ----------------- #
+def test_invalidate_under_traffic_pinned_vs_latest(engine, registry):
+    """The paper's freshness guarantee: pinned tickets in flight across an
+    `invalidate()` resolve against their old version; tickets submitted
+    after the swap see the new one."""
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=32)     # no loop: controlled flush
+    q = ids_go[7]
+    pinned = [sched.submit(TopKRequest("go", "transe", q, 5,
+                                       version="2024-01"))
+              for _ in range(4)]
+    latest_pre = [sched.submit(TopKRequest("go", "transe", q, 5))
+                  for _ in range(4)]
+    assert all(t.version == "2024-02" for t in latest_pre)
+
+    # the update lands while all of the above are still queued
+    _publish(registry, "go", "2024-03", "transe", seed=4)
+    eng.invalidate("go", "2024-03")
+    latest_post = [sched.submit(TopKRequest("go", "transe", q, 5))
+                   for _ in range(4)]
+    assert all(t.version == "2024-03" for t in latest_post)
+    sched.flush()
+
+    exp = {v: [c.identifier for c in eng.closest_concepts(
+               "go", "transe", q, k=5, version=v)]
+           for v in ("2024-01", "2024-02", "2024-03")}
+    assert exp["2024-02"] != exp["2024-03"]       # the swap is observable
+    for t in pinned:
+        assert [c.identifier for c in t.result(timeout=0)] == exp["2024-01"]
+    for t in latest_pre:
+        assert [c.identifier for c in t.result(timeout=0)] == exp["2024-02"]
+    for t in latest_post:
+        assert [c.identifier for c in t.result(timeout=0)] == exp["2024-03"]
+
+
+def test_invalidate_under_loop_traffic(engine, registry):
+    """Same guarantee with the background loop racing the updater: a
+    continuous stream of latest-pinned tickets across the swap resolves
+    against exactly one of {old, new} — the one pinned at submit."""
+    eng, ids_go, _ = engine
+    q = ids_go[3]
+    exp_old = [c.identifier for c in eng.closest_concepts(
+        "go", "transe", q, k=5, version="2024-02")]
+    with BatchScheduler(eng, max_batch=8, flush_after_ms=1) as sched:
+        stream = []
+        for i in range(60):
+            if i == 30:
+                _publish(registry, "go", "2024-03", "transe", seed=4)
+                eng.invalidate("go", "2024-03")
+            stream.append(sched.submit(TopKRequest("go", "transe", q, 5)))
+            if i % 7 == 0:
+                time.sleep(0.002)                  # let deadlines fire
+    exp_new = [c.identifier for c in eng.closest_concepts(
+        "go", "transe", q, k=5, version="2024-03")]
+    seen_versions = set()
+    for t in stream:
+        got = [c.identifier for c in t.result(timeout=10)]
+        assert got == (exp_old if t.version == "2024-02" else exp_new)
+        seen_versions.add(t.version)
+    assert seen_versions == {"2024-02", "2024-03"}   # swap mid-stream
+
+
+# ------------------------- deadline policy ------------------------------ #
+def test_full_batch_flushes_before_deadline(engine):
+    """A queue reaching max_batch flushes immediately — well before a long
+    deadline — while a lone straggler waits for the deadline."""
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=8, flush_after_ms=2000)
+    try:
+        t0 = time.monotonic()
+        tickets = [sched.submit(TopKRequest("go", "transe", ids_go[i], 5))
+                   for i in range(8)]              # exactly max_batch
+        for t in tickets:
+            t.result(timeout=10)
+        assert time.monotonic() - t0 < 1.0         # didn't wait out 2s
+        assert sched.stats["full_flushes"] >= 1
+    finally:
+        sched.stop()
+
+
+def test_straggler_resolves_at_deadline_without_flush_call(engine):
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=64, flush_after_ms=10)
+    try:
+        t = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+        res = t.result(timeout=10)                 # nobody calls flush()
+        assert len(res) == 5
+        assert sched.stats["deadline_flushes"] >= 1
+        assert sched.stats["flushes"] == 0         # no manual flush involved
+    finally:
+        sched.stop()
+
+
+def test_deadline_update_applies_to_running_loop(engine):
+    """start(flush_after_ms=...) on a live loop must take effect
+    immediately — the loop re-reads the deadline every pass rather than
+    caching it at thread entry."""
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=64, flush_after_ms=5000)
+    try:
+        t0 = time.monotonic()
+        t = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+        sched.start(flush_after_ms=5)         # shrink the 5 s deadline
+        assert len(t.result(timeout=10)) == 5
+        assert time.monotonic() - t0 < 2.0    # resolved at ~5 ms, not 5 s
+    finally:
+        sched.stop()
+
+
+def test_manual_flush_coexists_with_loop(engine):
+    """flush() while the loop runs: queues are popped under the lock, so
+    each ticket is executed by exactly one drainer."""
+    eng, ids_go, _ = engine
+    with BatchScheduler(eng, max_batch=16, flush_after_ms=1) as sched:
+        tickets = []
+        for round_ in range(10):
+            tickets += [sched.submit(TopKRequest("go", "transe", ids_go[i], 5))
+                        for i in range(8)]
+            sched.flush()
+        for t in tickets:
+            t.result(timeout=10)
+    assert sched.stats["resolved"] == sched.stats["submitted"] == len(tickets)
+
+
+def test_stop_drains_outstanding_tickets(engine):
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=64, flush_after_ms=5000)
+    tickets = [sched.submit(TopKRequest("go", "transe", ids_go[i], 5))
+               for i in range(5)]
+    sched.stop()                                   # deadline far away: drain
+    assert all(t.done() for t in tickets)
+    assert len(tickets[0].result(timeout=0)) == 5
+
+
+def test_malformed_query_cannot_kill_the_loop(engine):
+    """Regression: a query that makes resolve() *raise* (None isn't a str)
+    used to escape _run_queues and kill the daemon thread, stranding every
+    other ticket in the drained batch and wedging all later submits. It
+    must fail alone, and the loop must keep serving."""
+    eng, ids_go, _ = engine
+    with BatchScheduler(eng, max_batch=8, flush_after_ms=1) as sched:
+        ok1 = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+        poison = sched.submit(TopKRequest("go", "transe", None, 5))
+        assert len(ok1.result(timeout=10)) == 5        # same batch survives
+        assert "bad query" in poison.exception(timeout=10)
+        assert sched.running()                         # daemon still alive
+        ok2 = sched.submit(TopKRequest("go", "transe", ids_go[1], 5))
+        assert len(ok2.result(timeout=10)) == 5        # loop still serving
+    assert sched.stats["resolved"] == sched.stats["submitted"] == 3
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_start_restarts_after_loop_thread_death(engine, monkeypatch):
+    """Regression: start() used to check `_thread is not None` rather than
+    liveness, so a crashed loop could never be restarted. The injected
+    crash deliberately escapes _drain's guard, so pytest's thread-exception
+    warning is expected noise here."""
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    # force the daemon to die instantly on an injected catastrophic bug
+    # (SystemExit bypasses even _drain's except-Exception guard)
+    monkeypatch.setattr(
+        sched, "_drain",
+        lambda queues, collect=True: (_ for _ in ()).throw(SystemExit))
+    sched.start(flush_after_ms=1)
+    sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+    sched._thread.join(timeout=10)
+    assert not sched.running()
+    monkeypatch.undo()
+    sched.start()                                      # dead thread replaced
+    assert sched.running()
+    t = sched.submit(TopKRequest("go", "transe", ids_go[1], 5))
+    assert len(t.result(timeout=10)) == 5              # loop serving again
+    sched.stop()
+
+
+def test_unknown_query_fails_alone_under_loop(engine):
+    eng, ids_go, _ = engine
+    with BatchScheduler(eng, max_batch=8, flush_after_ms=1) as sched:
+        ok = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+        bad = sched.submit(TopKRequest("go", "transe", "GO:9999999", 5))
+        bad_ont = sched.submit(TopKRequest("mars", "transe", ids_go[0], 5))
+        assert len(ok.result(timeout=10)) == 5
+        assert "unknown class" in bad.exception(timeout=10)
+        assert "mars" in bad_ont.exception(timeout=10)
+    assert sched.stats["failed"] == 2
+
+
+def test_submit_after_stop_is_rejected_not_stranded(engine):
+    """Regression: a submit landing after stop()'s final drain used to
+    enqueue into queues nothing would ever flush — the ticket hung
+    forever. Executor-shutdown semantics now: reject at submit, and
+    start() re-opens intake."""
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=8, flush_after_ms=1)
+    ok = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+    sched.stop()
+    assert len(ok.result(timeout=0)) == 5
+    late = sched.submit(TopKRequest("go", "transe", ids_go[1], 5))
+    assert "stopped" in late.exception(timeout=0)      # resolved, not hung
+    assert sched.stats["resolved"] == sched.stats["submitted"]
+    sched.start()                                      # intake re-opens
+    again = sched.submit(TopKRequest("go", "transe", ids_go[1], 5))
+    assert len(again.result(timeout=10)) == 5
+    sched.stop()
+
+
+def test_registry_fault_at_submit_keeps_invariant(engine, monkeypatch):
+    """Regression: a non-KeyError from latest_version (e.g. an OSError
+    from a disk-backed registry) escaped submit() after `submitted` was
+    already counted, permanently breaking resolved == submitted."""
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    monkeypatch.setattr(eng, "latest_version",
+                        lambda ont: (_ for _ in ()).throw(OSError("disk")))
+    t = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+    assert "disk" in t.exception(timeout=0)
+    assert sched.stats["resolved"] == sched.stats["submitted"] == 1
+    monkeypatch.undo()
+    t2 = sched.submit(TopKRequest("go", "transe", ids_go[0], 5))
+    sched.flush()
+    assert len(t2.result(timeout=0)) == 5
+
+
+# ------------------------------ Ticket API ------------------------------ #
+def test_ticket_future_api(engine):
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    t = sched.submit(TopKRequest("go", "transe", ids_go[0], 3))
+    assert not t.done() and "pending" in repr(t)
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0.01)
+    res = sched.flush()
+    assert t.done() and t.exception() is None and "done" in repr(t)
+    assert t.result() == res[t.id]
+    # int interop: hashes/compares like its id
+    assert t == t.id and hash(t) == hash(t.id) and int(t) == t.id
+    assert t in res and res[t] == t.result()
+    bad = sched.submit(TopKRequest("go", "transe", "NOPE", 3))
+    sched.flush()
+    assert "failed" in repr(bad)
+    assert bad < sched.submit(TopKRequest("go", "transe", ids_go[0], 3))
+
+
+def test_start_requires_deadline_and_is_idempotent(engine):
+    eng, ids_go, _ = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    with pytest.raises(ValueError):
+        sched.start()
+    sched.start(flush_after_ms=1)
+    sched.start()                                  # idempotent while running
+    assert sched.running()
+    sched.stop()
+    assert not sched.running()
+    with pytest.raises(ValueError):
+        BatchScheduler(eng, flush_after_ms=-1)

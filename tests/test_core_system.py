@@ -28,15 +28,30 @@ class MemChannel:
         self._v, self._kg = version, kg
 
 
-@pytest.fixture()
-def served(registry, tiny_go):
-    """Registry with one published version + engine."""
+def _publish_one_release(registry, tiny_go):
+    """Train-and-publish one version into ``registry``; the shared body of
+    both `served` fixtures."""
     upd = Updater(registry, models=TWO, dim=16, train_cfg=FAST,
                   steps_override=40)
     ch = MemChannel("go", "2023-01-01", tiny_go)
     rep = upd.run_once(ch)
     assert rep.changed and rep.trained_models == list(TWO)
     return registry, ServingEngine(registry), ch, upd
+
+
+@pytest.fixture()
+def served(registry, tiny_go):
+    """Registry with one published version + engine (fresh per test — for
+    tests that publish new releases or mutate updater state)."""
+    return _publish_one_release(registry, tiny_go)
+
+
+@pytest.fixture(scope="module")
+def served_ro(tmp_path_factory, tiny_go):
+    """Same published state, trained once per module — for read-only
+    endpoint tests (training two models per test dominated suite time)."""
+    registry = EmbeddingRegistry(tmp_path_factory.mktemp("served") / "reg")
+    return _publish_one_release(registry, tiny_go)
 
 
 # ------------------------- updater semantics ------------------------- #
@@ -104,6 +119,7 @@ def test_store_latest_version_natural_order(tmp_path):
     assert version_sort_key("v10") > version_sort_key("v2")
 
 
+@pytest.mark.slow
 def test_poll_loop_runs_all_channels(registry, tiny_go, tiny_hp):
     upd = Updater(registry, models=("transe",), dim=8, train_cfg=FAST,
                   steps_override=10)
@@ -115,8 +131,8 @@ def test_poll_loop_runs_all_channels(registry, tiny_go, tiny_hp):
 
 
 # ------------------------- the three endpoints ------------------------- #
-def test_download_endpoint_payload(served):
-    registry, engine, ch, _ = served
+def test_download_endpoint_payload(served_ro):
+    registry, engine, ch, _ = served_ro
     payload = json.loads(engine.download("go", "transe"))
     assert len(payload) == 120
     vecs = list(payload.values())
@@ -126,8 +142,8 @@ def test_download_endpoint_payload(served):
     assert payload == payload_v
 
 
-def test_similarity_endpoint(served, tiny_go):
-    registry, engine, ch, _ = served
+def test_similarity_endpoint(served_ro, tiny_go):
+    registry, engine, ch, _ = served_ro
     a, b = tiny_go.entities[0], tiny_go.entities[1]
     s_ab = engine.similarity("go", "transe", a, b)
     s_ba = engine.similarity("go", "transe", b, a)
@@ -136,8 +152,8 @@ def test_similarity_endpoint(served, tiny_go):
     assert -1.001 <= s_ab <= 1.001
 
 
-def test_similarity_accepts_labels_with_normalization(served, tiny_go):
-    registry, engine, ch, _ = served
+def test_similarity_accepts_labels_with_normalization(served_ro, tiny_go):
+    registry, engine, ch, _ = served_ro
     ident = tiny_go.entities[5]
     label = tiny_go.terms[ident].label
     messy = "  " + label.upper().replace(" ", "   ") + " "
@@ -146,14 +162,14 @@ def test_similarity_accepts_labels_with_normalization(served, tiny_go):
     assert s1 == s2
 
 
-def test_unknown_class_raises(served):
-    _, engine, _, _ = served
+def test_unknown_class_raises(served_ro):
+    _, engine, _, _ = served_ro
     with pytest.raises(KeyError):
         engine.similarity("go", "transe", "GO:9999999", "GO:0000001")
 
 
-def test_closest_concepts_endpoint(served, tiny_go):
-    registry, engine, ch, _ = served
+def test_closest_concepts_endpoint(served_ro, tiny_go):
+    registry, engine, ch, _ = served_ro
     q = tiny_go.entities[3]
     res = engine.closest_concepts("go", "transe", q, k=10)
     assert len(res) == 10
@@ -164,8 +180,8 @@ def test_closest_concepts_endpoint(served, tiny_go):
     assert all(isinstance(c.label, str) and c.label for c in res)
 
 
-def test_scheduler_matches_individual_queries(served, tiny_go):
-    registry, engine, ch, _ = served
+def test_scheduler_matches_individual_queries(served_ro, tiny_go):
+    registry, engine, ch, _ = served_ro
     sched = BatchScheduler(engine, max_batch=8)
     queries = tiny_go.entities[:20]
     tickets = [sched.submit(TopKRequest("go", "transe", q, 5))
@@ -178,8 +194,8 @@ def test_scheduler_matches_individual_queries(served, tiny_go):
 
 
 # ------------------------- registry / PROV ------------------------- #
-def test_prov_roundtrip_and_validation(served):
-    registry, _, _, _ = served
+def test_prov_roundtrip_and_validation(served_ro):
+    registry, _, _, _ = served_ro
     ids, labels, emb, meta = registry.get("go", "transe")
     assert validate_prov(meta["prov"])
     blob = json.dumps(meta["prov"])

@@ -147,6 +147,7 @@ def test_walks_corpus(tiny_go):
     assert (pairs != pad).all()
 
 
+@pytest.mark.slow
 def test_adam_converges_quadratic():
     from repro.optim import adam
     opt = adam(0.1)

@@ -7,6 +7,9 @@ import pytest
 
 from repro.models import blocks, build, get_config
 
+# LM-zoo/trainer tests: tier-2 only (run with plain `pytest`)
+pytestmark = pytest.mark.slow
+
 
 def test_quantize_roundtrip():
     x = jax.random.normal(jax.random.key(0), (3, 4, 7, 32), jnp.float32) * 5

@@ -24,6 +24,7 @@ def _unit(key, n, d, dtype=jnp.float32):
 # ===================================================================== #
 # top-k cosine
 # ===================================================================== #
+@pytest.mark.slow
 @pytest.mark.parametrize("Q,N,d,k,block_n", [
     (1, 100, 16, 10, 32),
     (4, 1000, 200, 10, 256),      # the paper's dim/k
@@ -58,6 +59,7 @@ def test_topk_exclude_rows_matches_ref():
         assert x not in i[r]
 
 
+@pytest.mark.slow
 def test_topk_k_exceeds_table_regression():
     """Regression: k (or k+1 with self-exclusion) > N used to return
     sentinel rows (score -1e30, index 0) that serving surfaced as fake
@@ -80,6 +82,7 @@ def test_topk_k_exceeds_table_regression():
         assert 1 not in i[0, :v[0]]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_topk_dtypes(dtype):
     kq, ke = jax.random.split(jax.random.key(1))
@@ -93,6 +96,7 @@ def test_topk_dtypes(dtype):
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(n=st.integers(5, 400), d=st.sampled_from([8, 32, 200]),
        k=st.integers(1, 5), seed=st.integers(0, 2**16))
@@ -112,9 +116,64 @@ def test_topk_property(n, d, k, seed):
         np.testing.assert_allclose(s[r, 0], full[r].max(), rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("N,d,k,batch", [
+    (7, 8, 10, 1),        # k > N: clamps, valid marks the real entries
+    (16, 8, 16, 3),       # k == N
+    (3, 4, 9, 2),         # tiny table, k far beyond N
+    (100, 16, 10, 4),
+    (257, 32, 5, 2),      # ragged N (not a block multiple)
+    (64, 200, 10, 8),     # the paper's dim
+])
+def test_topk_parity_grid(N, d, k, batch):
+    """Pallas vs ref over the (N, d, k, batch) grid with exclude_rows
+    hitting the last valid row: identical (scores, indices, valid) on the
+    valid region, sentinel (-1e30) beyond it in both."""
+    kq, ke = jax.random.split(jax.random.key(N * 1000 + k))
+    q, e = _unit(kq, batch, d), _unit(ke, N, d)
+    # alternate: exclude the LAST valid table row / no exclusion
+    excl = jnp.array([N - 1 if i % 2 == 0 else -1 for i in range(batch)],
+                     jnp.int32)
+    s, i, v = topk_cosine_pallas(q, e, k, exclude_rows=excl, block_n=64,
+                                 interpret=True)
+    s_ref, i_ref, v_ref = ref.topk_cosine_ref(q, e, k, exclude_rows=excl)
+    s, i, v = np.asarray(s), np.asarray(i), np.asarray(v)
+    s_ref, i_ref, v_ref = np.asarray(s_ref), np.asarray(i_ref), np.asarray(v_ref)
+    np.testing.assert_array_equal(v, v_ref)
+    assert s.shape == s_ref.shape == (batch, min(k, N))
+    for r in range(batch):
+        np.testing.assert_allclose(s[r, :v[r]], s_ref[r, :v[r]],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(i[r, :v[r]], i_ref[r, :v[r]])
+        assert (s[r, v[r]:] < -1e29).all() and (s_ref[r, v[r]:] < -1e29).all()
+        if r % 2 == 0:
+            assert N - 1 not in i[r, :v[r]]         # exclusion held
+
+
+def test_topk_sharded_single_device_fallback():
+    """mesh=None (and a 1-device axis) must route through the unchanged
+    single-device dispatcher, bit-identical results."""
+    kq, ke = jax.random.split(jax.random.key(11))
+    q, e = _unit(kq, 3, 16), _unit(ke, 90, 16)
+    excl = jnp.array([89, -1, 5], jnp.int32)
+    s0, i0, v0 = ops.topk_cosine(q, e, 7, exclude_rows=excl, use_pallas=False)
+    s1, i1, v1 = ops.topk_cosine_sharded(q, e, 7, exclude_rows=excl,
+                                         mesh=None, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    # padded table + n_valid slices back to the real rows on the fallback
+    e_pad = jnp.concatenate([e, jnp.zeros((6, 16))], axis=0)
+    s2, i2, v2 = ops.topk_cosine_sharded(q, e_pad, 7, exclude_rows=excl,
+                                         mesh=None, n_valid=90,
+                                         use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v2))
+
+
 # ===================================================================== #
 # KGE scoring
 # ===================================================================== #
+@pytest.mark.slow
 @pytest.mark.parametrize("model", ["transe_l1", "transe_l2", "distmult"])
 @pytest.mark.parametrize("B,K,d", [(32, 8, 64), (100, 5, 200), (7, 3, 32)])
 def test_kge_score_matches_ref(model, B, K, d):
@@ -132,6 +191,7 @@ def test_kge_score_matches_ref(model, B, K, d):
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.slow
 @settings(max_examples=15, deadline=None)
 @given(b=st.integers(1, 64), k=st.integers(1, 8),
        d=st.sampled_from([16, 200]), seed=st.integers(0, 2**16))
@@ -150,6 +210,7 @@ def test_kge_score_property(b, k, d, seed):
 # ===================================================================== #
 # sliding-window attention kernel
 # ===================================================================== #
+@pytest.mark.slow
 @pytest.mark.parametrize("B,H,S,hd,W", [
     (1, 2, 128, 32, 32),
     (2, 4, 256, 64, 64),

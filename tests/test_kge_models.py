@@ -37,6 +37,7 @@ def test_init_and_score_shapes(name):
     assert emb.shape[0] == 50
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", SIX)
 def test_training_reduces_loss(name, tiny_go):
     kg = tiny_go
@@ -56,6 +57,7 @@ def test_training_reduces_loss(name, tiny_go):
     assert last < first, (name, first, last)
 
 
+@pytest.mark.slow
 def test_transe_translational_geometry():
     """After training, linked pairs should score above random pairs."""
     rng = np.random.default_rng(0)
@@ -112,6 +114,7 @@ def test_rank_eval_perfect_model_gets_mrr_1(tiny_go):
     assert res["hits@1"] > 0.99
 
 
+@pytest.mark.slow
 def test_eval_metrics_trained_beats_random(tiny_go):
     kg = tiny_go
     m = make_model("distmult", kg.num_entities, kg.num_relations, dim=32)

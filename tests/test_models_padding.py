@@ -13,6 +13,10 @@ import numpy as np
 from repro.models import get_config
 from repro.models import blocks
 from repro.models.config import ArchConfig
+import pytest
+
+# LM-zoo/trainer tests: tier-2 only (run with plain `pytest`)
+pytestmark = pytest.mark.slow
 
 
 def _mini_cfg(**kw):

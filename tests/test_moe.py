@@ -7,6 +7,9 @@ import pytest
 from repro.models import blocks
 from repro.models.config import ArchConfig, MoEConfig
 
+# LM-zoo/trainer tests: tier-2 only (run with plain `pytest`)
+pytestmark = pytest.mark.slow
+
 
 def _cfg(E=4, k=2, cf=8.0, d=32, ff=64):
     return ArchConfig(arch_id="moe-t", family="moe", n_layers=1, d_model=d,

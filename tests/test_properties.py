@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kge.losses import bce, margin_ranking, nssa, softplus_loss
@@ -38,6 +39,7 @@ def test_rope_preserves_norm():
 
 
 # --------------------- attention ---------------------- #
+@pytest.mark.slow
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 2**16), s=st.integers(4, 40))
 def test_causal_attention_ignores_future(seed, s):

@@ -6,6 +6,10 @@ import numpy as np
 
 from repro.models import blocks
 from repro.models.config import ArchConfig, HybridConfig, SSMConfig
+import pytest
+
+# LM-zoo/trainer tests: tier-2 only (run with plain `pytest`)
+pytestmark = pytest.mark.slow
 
 
 def _ssm_cfg(d=32, st=4):

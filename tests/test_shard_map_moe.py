@@ -16,6 +16,9 @@ from pathlib import Path
 import numpy as np
 import pytest
 
+# LM-zoo/trainer tests: tier-2 only (run with plain `pytest`)
+pytestmark = pytest.mark.slow
+
 REPO = Path(__file__).resolve().parents[1]
 
 SCRIPT = textwrap.dedent("""

@@ -1,0 +1,102 @@
+"""Device-sharded top-k vs the single-device ref oracle.
+
+The sharded path (table P("data", None) across devices, per-shard local
+top-k through the existing kernel contract, global candidate merge) must
+return the same (scores, indices, valid) as the unsharded oracle over the
+parity grid — including k > N, k == N, exclusion of the last valid row,
+and tables whose row count doesn't divide the shard count (zero-pad +
+post-top-k masking). A dropped shard offset, a pad row leaking into the
+candidates, or an exclusion applied in the wrong shard all fail it — and
+all of those pass trivially on one device, so this runs in a subprocess
+with 4 forced host devices.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.kernels import ops, ref
+
+    mesh = jax.make_mesh((4,), ("data",))
+    assert ops.mesh_data_shards(mesh) == 4
+    rng = np.random.default_rng(0)
+
+    def unit(n, d):
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+    # (Q, N, d, k): k > N, k == N, ragged N (pad path), block-multiple N
+    GRID = [(1, 7, 8, 10), (2, 3, 4, 9), (1, 16, 8, 16), (3, 101, 16, 10),
+            (4, 64, 32, 5), (2, 130, 200, 10)]
+    # pallas-in-shard_map runs interpret mode on CPU (slow): a subset with
+    # every edge class keeps the subprocess inside the fast-tier budget
+    PALLAS_GRID = [(2, 3, 4, 9), (3, 101, 16, 10), (2, 130, 200, 10)]
+    checked = 0
+    for use_pallas in (False, True):
+        for (Q, N, d, k) in (PALLAS_GRID if use_pallas else GRID):
+            q, e = unit(Q, d), unit(N, d)
+            # exclusion hits the LAST valid row on even queries
+            excl = jnp.array([N - 1 if i % 2 == 0 else -1 for i in range(Q)],
+                             jnp.int32)
+            es, n_valid = ops.shard_table(e, mesh)
+            assert es.shape[0] % 4 == 0 and n_valid == N
+            s, i, v = ops.topk_cosine_sharded(
+                jnp.asarray(q), es, k, exclude_rows=excl, mesh=mesh,
+                n_valid=n_valid, use_pallas=use_pallas)
+            sr, ir, vr = ref.topk_cosine_ref(jnp.asarray(q), jnp.asarray(e),
+                                             k, exclude_rows=excl)
+            s, i, v = np.asarray(s), np.asarray(i), np.asarray(v)
+            sr, ir, vr = np.asarray(sr), np.asarray(ir), np.asarray(vr)
+            assert (v == vr).all(), (use_pallas, Q, N, d, k, v, vr)
+            assert s.shape == sr.shape == (Q, min(k, N))
+            for r in range(Q):
+                np.testing.assert_allclose(s[r, :v[r]], sr[r, :v[r]],
+                                           rtol=1e-5, atol=1e-5)
+                np.testing.assert_array_equal(i[r, :v[r]], ir[r, :v[r]])
+                assert (s[r, v[r]:] < -1e29).all()       # sentinel tail
+                assert (i[r, :v[r]] < N).all()           # no pad row leaks
+                if r % 2 == 0:
+                    assert N - 1 not in i[r, :v[r]]      # exclusion held
+            checked += 1
+
+    # end-to-end: a sharded ServingEngine serves the same answers
+    import tempfile
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import ServingEngine
+    reg = EmbeddingRegistry(tempfile.mkdtemp())
+    ids = [f"GO:{i:07d}" for i in range(33)]
+    reg.publish("go", "v1", "transe", ids, [f"t {i}" for i in range(33)],
+                rng.standard_normal((33, 12)).astype(np.float32),
+                ontology_checksum="x", hyperparameters={"dim": 12})
+    sharded = ServingEngine(reg, mesh=mesh)
+    solo = ServingEngine(reg)
+    for query, k in ((ids[5], 40), (ids[0], 10), (ids[32], 1)):
+        a = sharded.closest_concepts("go", "transe", query, k=k)
+        b = solo.closest_concepts("go", "transe", query, k=k)
+        assert [(c.identifier, round(c.score, 5)) for c in a] == \\
+               [(c.identifier, round(c.score, 5)) for c in b]
+    print(json.dumps({"devices": jax.device_count(), "checked": checked}))
+""")
+
+
+def test_sharded_topk_matches_ref_on_4_devices():
+    env = dict(os.environ,
+               PYTHONPATH=str(REPO / "src") + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    env.pop("JAX_PLATFORMS", None)          # subprocess sets its own flags
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    report = json.loads(out.stdout.strip().splitlines()[-1])
+    assert report["devices"] == 4
+    assert report["checked"] == 9           # 6 ref + 3 pallas grid points
