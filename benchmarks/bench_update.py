@@ -1,0 +1,238 @@
+"""Cold-vs-warm update benchmark: the delta-aware incremental pipeline.
+
+Runs the *same* synthetic low-churn release series (≤10% entity churn per
+release, like GO's monthly channel) through two update pipelines:
+
+  cold  — ``churn_threshold=0.0``: every release retrains every model from
+          scratch at the full step budget (the paper's recompute-everything
+          policy, and this repo's behavior before PR 3);
+  warm  — delta policy on: mid-series releases warm-start from the parent
+          version's params (surviving rows carried, new rows fresh) at
+          ``warm_frac`` of the full budget.
+
+Two numbers matter, both recorded in
+``benchmarks/results/BENCH_update.json``:
+
+  * **speedup** — mean cold wall / mean warm wall over mid-series updates
+    (the first release is full for both, so it is excluded).
+    Acceptance floor (PR 3): >= 2x.
+  * **quality parity** — filtered link-prediction MRR of the final
+    version's published params, warm vs cold, on an eval sample of that
+    release's triples. Tolerance (stated): warm MRR >= cold MRR -
+    max(0.05, 0.15 * cold MRR). Both pipelines train on the full release
+    (the updater publishes whole-graph embeddings), so this is fit-quality
+    parity on the same data, not held-out generalization.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_update [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+RESULTS = REPO / "benchmarks" / "results"
+FLOOR = 2.0              # warm speedup floor over mid-series updates
+#: at CI size (--fast: 500 steps) jit compile time — paid equally by both
+#: pipelines and independent of the step budget — compresses the measured
+#: ratio (observed 1.4-2.0x vs 2.5x full-size); the 2x acceptance floor is
+#: the full-size bench's number, the CI floor only catches "warm path
+#: stopped engaging" regressions (ratio ~1.0)
+FAST_FLOOR = 1.25
+MRR_TOL_ABS = 0.05       # quality parity: absolute MRR slack ...
+MRR_TOL_REL = 0.15       # ... or relative, whichever is looser
+#: per-release evolution knobs keeping entity churn <= ~10%
+CALM = dict(add_frac=0.02, obsolete_frac=0.005, rewire_frac=0.005)
+
+
+def _run_pipeline(series, models, dim, cfg, steps, churn_threshold,
+                  warm_frac, engine_check=False):
+    """Drive one Updater over the whole series; returns per-version rows
+    and the final registry (kept open via the returned tempdir)."""
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import ServingEngine
+    from repro.core.updater import SyntheticReleaseChannel, Updater
+
+    td = tempfile.TemporaryDirectory()
+    registry = EmbeddingRegistry(Path(td.name) / "registry")
+    engine = ServingEngine(registry) if engine_check else None
+    upd = Updater(registry, engine=engine, models=models, dim=dim,
+                  train_cfg=cfg, steps_override=steps,
+                  churn_threshold=churn_threshold, warm_frac=warm_frac)
+    ch = SyntheticReleaseChannel("go")
+    rows = []
+    for tag, kg in series:
+        ch.bump(tag, kg)
+        rep = upd.run_once(ch)
+        assert rep.changed, f"release {tag} did not trigger an update"
+        if engine is not None:
+            assert engine.latest_version("go") == tag
+        rows.append({
+            "version": tag,
+            "mode": rep.mode,
+            "wall_s": round(rep.wall_s, 3),
+            "n_entities": kg.num_entities,
+            "churn_fraction": (rep.delta or {}).get("churn_fraction"),
+            "per_model": {m: {"mode": rep.details[m]["mode"],
+                              "wall_s": round(rep.details[m]["wall_s"], 3),
+                              "steps": rep.details[m]["steps"]}
+                          for m in models},
+        })
+    return rows, registry, td
+
+
+def _final_quality(series, registry, models, dim, eval_sample, seed=0):
+    """Filtered link-prediction MRR of the final published snapshot."""
+    from repro.kge import make_model, rank_based_eval
+
+    tag, kg = series[-1]
+    rng = np.random.default_rng(seed)
+    m = kg.num_triples
+    idx = rng.permutation(m)[: min(eval_sample, m)]
+    eval_triples = kg.triples[idx]
+    out = {}
+    for name in models:
+        params, _ = registry.get_params("go", name, tag)
+        model = make_model(name, kg.num_entities, kg.num_relations, dim=dim)
+        metrics = rank_based_eval(model, {k: np.asarray(v) for k, v in params.items()},
+                                  eval_triples, kg.triples, batch_size=64)
+        out[name] = round(metrics["mrr"], 4)
+    return out
+
+
+def run(fast: bool = False, models=("transe", "distmult")) -> dict:
+    from repro.kge.train import TrainConfig
+    from repro.ontology import GraphDelta
+    from repro.ontology.synthetic import GO_SPEC, release_series
+
+    n_terms = 300 if fast else 600
+    steps_cold = 500 if fast else 800
+    versions = 3 if fast else 4
+    dim = 64
+    warm_frac = 0.25
+    eval_sample = 120 if fast else 250
+    cfg = TrainConfig(batch_size=256, num_negs=16, lr=1e-2)
+
+    series = release_series(GO_SPEC, versions, seed=0, n_terms=n_terms, **CALM)
+    churns = [GraphDelta.compute(a, b).churn_fraction
+              for (_, a), (_, b) in zip(series, series[1:])]
+    assert max(churns) <= 0.10, f"series churn {churns} exceeds the <=10% contract"
+
+    report = {
+        "n_terms": n_terms, "versions": versions, "models": list(models),
+        "dim": dim, "steps_cold": steps_cold, "warm_frac": warm_frac,
+        "churn_fractions": [round(c, 4) for c in churns],
+        "mrr_tolerance": f"warm >= cold - max({MRR_TOL_ABS}, {MRR_TOL_REL}*cold)",
+    }
+
+    print(f"  [update] cold pipeline: full retrain every release "
+          f"({steps_cold} steps/model)")
+    cold_rows, cold_reg, cold_td = _run_pipeline(
+        series, models, dim, cfg, steps_cold,
+        churn_threshold=0.0, warm_frac=warm_frac)
+    print(f"  [update] warm pipeline: delta policy + warm-start "
+          f"({warm_frac:.0%} budget)")
+    warm_rows, warm_reg, warm_td = _run_pipeline(
+        series, models, dim, cfg, steps_cold,
+        churn_threshold=0.25, warm_frac=warm_frac, engine_check=True)
+
+    for label, rows in (("cold", cold_rows), ("warm", warm_rows)):
+        for r in rows:
+            print(f"    {label} {r['version']} mode={r['mode']:11s} "
+                  f"wall={r['wall_s']:.2f}s churn={r['churn_fraction']}")
+    assert all(r["mode"] == "full" for r in cold_rows)
+    assert all(r["mode"] == "incremental" for r in warm_rows[1:]), \
+        "low-churn mid-series releases must take the incremental path"
+
+    cold_mid = float(np.mean([r["wall_s"] for r in cold_rows[1:]]))
+    warm_mid = float(np.mean([r["wall_s"] for r in warm_rows[1:]]))
+    speedup = cold_mid / max(warm_mid, 1e-9)
+    floor = FAST_FLOOR if fast else FLOOR
+    report.update({
+        "cold": cold_rows, "warm": warm_rows,
+        "cold_mid_series_mean_s": round(cold_mid, 3),
+        "warm_mid_series_mean_s": round(warm_mid, 3),
+        "speedup_warm_vs_cold": round(speedup, 2),
+        "floor": floor,
+    })
+    print(f"  [update] mid-series wall: cold {cold_mid:.2f}s vs warm "
+          f"{warm_mid:.2f}s -> {speedup:.2f}x")
+
+    quality = {}
+    cold_mrr = _final_quality(series, cold_reg, models, dim, eval_sample)
+    warm_mrr = _final_quality(series, warm_reg, models, dim, eval_sample)
+    for name in models:
+        tol = max(MRR_TOL_ABS, MRR_TOL_REL * cold_mrr[name])
+        ok = warm_mrr[name] >= cold_mrr[name] - tol
+        quality[name] = {"cold_mrr": cold_mrr[name], "warm_mrr": warm_mrr[name],
+                         "tolerance": round(tol, 4), "parity": bool(ok)}
+        print(f"  [update] {name}: cold MRR {cold_mrr[name]:.4f} vs warm "
+              f"{warm_mrr[name]:.4f} (tol {tol:.4f}) "
+              f"{'OK' if ok else 'FAIL'}")
+    report["quality"] = quality
+    report["pass"] = bool(speedup >= floor
+                          and all(q["parity"] for q in quality.values()))
+    cold_td.cleanup()
+    warm_td.cleanup()
+    return report
+
+
+def floor_speedup(report: dict) -> float:
+    return report.get("speedup_warm_vs_cold", 0.0)
+
+
+def quality_parity(report: dict) -> bool:
+    return all(q.get("parity") for q in report.get("quality", {}).values())
+
+
+def section_key(fast: bool) -> str:
+    """Fast (CI-sized) runs record under their own key so they never
+    overwrite a full-sized trajectory with smaller-n numbers."""
+    return "update_fast" if fast else "update"
+
+
+def write_results(report: dict) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_update.json"
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            merged = {}
+    merged.update(report)
+    out.write_text(json.dumps(merged, indent=2))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized series (300 terms, 3 versions)")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    rep = run(fast=args.fast)
+    out = write_results({section_key(args.fast): rep})
+    print(f"[bench_update] wrote {out} ({time.perf_counter() - t0:.0f}s)")
+
+    s = floor_speedup(rep)
+    ok = rep["pass"]
+    print(f"[bench_update] {'PASS' if ok else 'FAIL'}: warm update "
+          f"{s:.2f}x cold (floor {rep['floor']}x), quality parity "
+          f"{quality_parity(rep)}")
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

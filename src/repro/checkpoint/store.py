@@ -1,8 +1,12 @@
 """Versioned on-disk snapshot store: npz tensors + json metadata.
 
-Layout (mirrors the paper's Zenodo deposit structure):
+Layout (mirrors the paper's Zenodo deposit structure; the params/graph
+sidecars are what make post-restart warm-starts possible — PR 3):
   <root>/<ontology>/<version>/<model>/embeddings.npz
-  <root>/<ontology>/<version>/<model>/metadata.json   (PROV sidecar)
+  <root>/<ontology>/<version>/<model>/metadata.json     (PROV sidecar)
+  <root>/<ontology>/<version>/<model>/params.npz        (full model params)
+  <root>/<ontology>/<version>/<model>/params_vocab.json (row-name vocab)
+  <root>/<ontology>/<version>/graph.npz + graph_terms.json  (parsed release)
 """
 from __future__ import annotations
 
@@ -59,6 +63,80 @@ class SnapshotStore:
 
     def exists(self, ontology: str, version: str, model: str) -> bool:
         return (self._dir(ontology, version, model) / "embeddings.npz").exists()
+
+    # ------------------- full-param snapshots (warm start) ------------- #
+    def save_params(
+        self,
+        ontology: str,
+        version: str,
+        model: str,
+        params: Dict[str, np.ndarray],
+        vocab: Dict[str, List[str]],
+    ) -> Path:
+        """Persist the *full* param pytree (not just the served entity
+        matrix) plus the row-name vocabulary for each table axis, so the
+        next release can warm-start even after a process restart.
+
+        ``vocab`` maps role -> names, e.g. {"entity": [...], "relation":
+        [...]}; for rdf2vec "entity" is the walk-token vocabulary.
+        """
+        d = self._dir(ontology, version, model)
+        d.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(
+            d / "params.npz",
+            **{k: np.asarray(v) for k, v in params.items()})
+        (d / "params_vocab.json").write_text(
+            json.dumps({k: list(map(str, v)) for k, v in vocab.items()}))
+        return d
+
+    def load_params(
+        self, ontology: str, version: str, model: str
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, List[str]]]:
+        d = self._dir(ontology, version, model)
+        with np.load(d / "params.npz", allow_pickle=False) as z:
+            params = {k: z[k] for k in z.files}
+        vocab = json.loads((d / "params_vocab.json").read_text())
+        return params, vocab
+
+    def has_params(self, ontology: str, version: str, model: str) -> bool:
+        d = self._dir(ontology, version, model)
+        return (d / "params.npz").exists() and (d / "params_vocab.json").exists()
+
+    # ----------------- parsed-release snapshots (deltas) --------------- #
+    def save_graph(self, ontology: str, version: str, kg) -> Path:
+        """Persist the parsed release at the version level so the next
+        update can compute an exact ``GraphDelta`` without re-downloading
+        (or keeping) the previous OBO file."""
+        d = self.root / ontology / version
+        d.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(
+            d / "graph.npz",
+            entities=np.asarray(kg.entities, dtype=np.str_),
+            relations=np.asarray(kg.relations, dtype=np.str_),
+            triples=np.asarray(kg.triples, dtype=np.int64),
+        )
+        terms = [[m.identifier, m.label, m.namespace, bool(m.obsolete),
+                  m.definition] for m in kg.terms.values()]
+        (d / "graph_terms.json").write_text(json.dumps(terms))
+        return d
+
+    def load_graph(self, ontology: str, version: str):
+        from ..ontology.graph import KnowledgeGraph, TermMeta
+
+        d = self.root / ontology / version
+        with np.load(d / "graph.npz", allow_pickle=False) as z:
+            entities = [str(x) for x in z["entities"]]
+            relations = [str(x) for x in z["relations"]]
+            triples = np.asarray(z["triples"], dtype=np.int64)
+        terms = {}
+        for ident, label, ns, obsolete, definition in json.loads(
+                (d / "graph_terms.json").read_text()):
+            terms[ident] = TermMeta(ident, label, ns, bool(obsolete), definition)
+        return KnowledgeGraph(entities, relations, triples, terms)
+
+    def has_graph(self, ontology: str, version: str) -> bool:
+        d = self.root / ontology / version
+        return (d / "graph.npz").exists() and (d / "graph_terms.json").exists()
 
     # ------------------------------------------------------------------ #
     def versions(self, ontology: str) -> List[str]:

@@ -5,12 +5,14 @@ from .serving import (BatchScheduler, ClosestConcept, EmbeddingIndex,
                       LRUIndexCache, SchedulerError, ServingEngine, Ticket,
                       TopKRequest)
 from .updater import (PAPER_MODELS, FileReleaseChannel, ReleaseChannel,
-                      UpdateReport, Updater, poll_loop)
+                      SyntheticReleaseChannel, UpdatePlan, UpdateReport,
+                      Updater, poll_loop)
 
 __all__ = [
     "prov_record", "validate_prov", "EmbeddingRegistry",
     "BatchScheduler", "ClosestConcept", "EmbeddingIndex", "LRUIndexCache",
     "SchedulerError", "ServingEngine", "Ticket", "TopKRequest",
-    "PAPER_MODELS", "FileReleaseChannel",
-    "ReleaseChannel", "UpdateReport", "Updater", "poll_loop",
+    "PAPER_MODELS", "FileReleaseChannel", "ReleaseChannel",
+    "SyntheticReleaseChannel", "UpdatePlan", "UpdateReport", "Updater",
+    "poll_loop",
 ]

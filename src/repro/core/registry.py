@@ -39,7 +39,18 @@ class EmbeddingRegistry:
         hyperparameters: Dict[str, Any],
         train_stats: Optional[Dict[str, Any]] = None,
         generated_at: Optional[str] = None,
+        params: Optional[Dict[str, np.ndarray]] = None,
+        params_vocab: Optional[Dict[str, Sequence[str]]] = None,
+        lineage: Optional[Dict[str, Any]] = None,
     ) -> None:
+        """Publish one (ontology, version, model) snapshot.
+
+        ``params``/``params_vocab`` (optional) persist the full model param
+        pytree plus its row-name vocabularies so the *next* release can
+        warm-start from this one, even across a process restart.
+        ``lineage`` (optional) records how this snapshot was produced:
+        ``{"parent_version", "mode", "delta": {...}}``.
+        """
         assert embeddings.ndim == 2 and embeddings.shape[0] == len(entity_ids)
         generated_at = generated_at or _dt.datetime.now(_dt.timezone.utc).isoformat()
         prov = prov_record(
@@ -56,12 +67,18 @@ class EmbeddingRegistry:
             "generated_at": generated_at,
             "prov": prov,
         }
+        if lineage is not None:
+            meta["lineage"] = lineage
         arrays = {
             "embeddings": np.asarray(embeddings, dtype=np.float32),
             "entity_ids": np.asarray(entity_ids, dtype=np.str_),
             "labels": np.asarray(labels, dtype=np.str_),
         }
         self.store.save(ontology, version, model_name, arrays, meta)
+        if params is not None:
+            self.store.save_params(ontology, version, model_name,
+                                   {k: np.asarray(v) for k, v in params.items()},
+                                   {k: list(v) for k, v in (params_vocab or {}).items()})
 
     # ----------------------------- read -------------------------------- #
     def get(
@@ -80,6 +97,17 @@ class EmbeddingRegistry:
             arrays["embeddings"],
             meta,
         )
+
+    def get_params(
+        self, ontology: str, model_name: str, version: Optional[str] = None
+    ) -> Tuple[Dict[str, np.ndarray], Dict[str, List[str]]]:
+        """Full param pytree + row-name vocab of a published snapshot
+        (raises if the snapshot was published without params)."""
+        version = version or self.store.latest_version(ontology)
+        if version is None or not self.store.has_params(ontology, version, model_name):
+            raise KeyError(
+                f"no warm-startable params for {ontology}/{version}/{model_name}")
+        return self.store.load_params(ontology, version, model_name)
 
     def versions(self, ontology: str) -> List[str]:
         return self.store.versions(ontology)

@@ -1,4 +1,5 @@
 from .triples import TripleLoader
-from .walks import corpus, relation_token, skipgram_pairs
+from .walks import corpus, relation_token, skipgram_pairs, token_vocab
 
-__all__ = ["TripleLoader", "corpus", "relation_token", "skipgram_pairs"]
+__all__ = ["TripleLoader", "corpus", "relation_token", "skipgram_pairs",
+           "token_vocab"]

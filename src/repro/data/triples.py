@@ -21,12 +21,25 @@ class TripleLoader:
     @property
     def steps_per_epoch(self) -> int:
         m = self.triples.shape[0]
-        return m // self.batch_size if self.drop_remainder else -(-m // self.batch_size)
+        if m == 0:
+            return 0
+        if self.drop_remainder:
+            # a non-empty dataset smaller than one batch still yields one
+            # (tiled) batch per epoch — a 0-step epoch would make __iter__
+            # spin forever without ever yielding
+            return max(1, m // self.batch_size)
+        return -(-m // self.batch_size)
 
     def epoch(self) -> Iterator[np.ndarray]:
-        perm = self.rng.permutation(self.triples.shape[0])
+        m = self.triples.shape[0]
+        if m == 0:
+            raise ValueError("cannot iterate an empty TripleLoader")
+        perm = self.rng.permutation(m)
         shuf = self.triples[perm]
-        m = shuf.shape[0]
+        if self.drop_remainder and m < self.batch_size:
+            reps = -(-self.batch_size // m)
+            yield np.tile(shuf, (reps, 1))[: self.batch_size]
+            return
         end = m - m % self.batch_size if self.drop_remainder else m
         for start in range(0, end, self.batch_size):
             batch = shuf[start : start + self.batch_size]

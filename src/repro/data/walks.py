@@ -61,6 +61,20 @@ def _walk(
     return seq
 
 
+def token_vocab(kg: KnowledgeGraph, add_inverse: bool = True) -> list:
+    """Symbolic names for the walk-token vocabulary, aligned with
+    :func:`corpus`'s integer ids: entities [0, N) keep their identifiers,
+    relation tokens are prefixed (``%rel%is_a``, ``%rel%is_a_inv``), and the
+    PAD token is last. This is what makes rdf2vec warm-startable — two
+    versions' token rows can be matched by name even though every integer
+    id above an inserted entity shifts.
+    """
+    rels = list(kg.relations)
+    if add_inverse:
+        rels = rels + [r + "_inv" for r in kg.relations]
+    return list(kg.entities) + [f"%rel%{r}" for r in rels] + ["%pad%"]
+
+
 def corpus(
     kg: KnowledgeGraph,
     key: jax.Array,

@@ -1,4 +1,5 @@
-from .base import KGEModel, KGESpec, PAPER_DIM, PAPER_EPOCHS, available_models, make_model
+from .base import (KGEModel, KGESpec, PAPER_DIM, PAPER_EPOCHS,
+                   available_models, make_model, remap_params, vocab_remap)
 from . import transe, transr, distmult, hole, boxe, rdf2vec  # noqa: F401 (registry)
 from .eval import rank_based_eval
 from .losses import LOSSES, get_loss
@@ -7,7 +8,8 @@ from .train import KGETrainer, TrainConfig, make_train_step
 
 __all__ = [
     "KGEModel", "KGESpec", "PAPER_DIM", "PAPER_EPOCHS",
-    "available_models", "make_model", "rank_based_eval",
+    "available_models", "make_model", "remap_params", "vocab_remap",
+    "rank_based_eval",
     "LOSSES", "get_loss", "corrupt",
     "KGETrainer", "TrainConfig", "make_train_step",
 ]

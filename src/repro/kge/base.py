@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Params = Dict[str, jnp.ndarray]
 
@@ -72,6 +73,28 @@ class KGEModel:
     def entity_embeddings(self, params: Params) -> jnp.ndarray:
         """(N, dim) table that the serving layer snapshots and serves."""
         return params["entity"]
+
+    # ------------------------------------------------------------------ #
+    def param_roles(self) -> Dict[str, Optional[str]]:
+        """Which vocabulary each param table's leading axis indexes.
+
+        Returns {param_name: "entity" | "relation" | None}. The default
+        infers the role from the leading dimension — every bundled model's
+        tables are either entity-rowed (``entity``, ``bump``, rdf2vec's
+        ``context``) or relation-rowed (``relation``, ``proj``, ``center``,
+        ``width_raw``). Entity wins ties when n_entities == n_relations;
+        override for models where that inference is wrong.
+        """
+        shapes = jax.eval_shape(self.init, jax.random.key(0))
+        roles: Dict[str, Optional[str]] = {}
+        for name, v in shapes.items():
+            if v.shape and v.shape[0] == self.spec.n_entities:
+                roles[name] = "entity"
+            elif v.shape and v.shape[0] == self.spec.n_relations:
+                roles[name] = "relation"
+            else:
+                roles[name] = None
+        return roles
 
     # ------------------------------------------------------------------ #
     def param_shardings(self, mesh_axis: str = "model",
@@ -133,3 +156,68 @@ def _uniform_init(key: jax.Array, shape: Tuple[int, ...], dim: int, dtype) -> jn
     """PyKEEN/TransE-style xavier-uniform: U(-6/sqrt(d), 6/sqrt(d))."""
     bound = 6.0 / jnp.sqrt(jnp.asarray(dim, jnp.float32))
     return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+# ------------------------- warm-start helpers ------------------------- #
+def vocab_remap(old_vocab, new_vocab) -> np.ndarray:
+    """Row map from a new vocabulary onto an old one, matched by name.
+
+    Returns an (len(new_vocab),) int32 array: ``map[i]`` is the old row of
+    new item ``i``, or -1 if the item did not exist in the old vocabulary
+    (fresh-initialize). Works for entity lists, relation lists, and
+    rdf2vec walk-token vocabularies alike — anything addressed by string.
+    """
+    old_index = {name: i for i, name in enumerate(old_vocab)}
+    return np.asarray([old_index.get(name, -1) for name in new_vocab],
+                      dtype=np.int32)
+
+
+def remap_params(
+    model: "KGEModel",
+    key: jax.Array,
+    prev_params: Params,
+    entity_map,
+    relation_map,
+) -> Tuple[Params, Dict[str, int]]:
+    """Map a previous version's params onto ``model``'s index space.
+
+    For each param table, rows whose vocabulary item survived the release
+    (map >= 0) are carried over from ``prev_params``; rows for new items
+    keep their fresh initialization; rows for removed items are dropped.
+    Tables whose trailing shape changed (e.g. a dim change between
+    versions) or that the previous checkpoint lacks fall back to fresh
+    init wholesale — a silent architecture mismatch must not corrupt
+    training.
+
+    Returns (params, stats) with per-role carried/fresh row counts.
+    """
+    fresh = model.init(key)
+    roles = model.param_roles()
+    maps = {"entity": np.asarray(entity_map, dtype=np.int32),
+            "relation": np.asarray(relation_map, dtype=np.int32)}
+    out: Params = {}
+    stats = {"entity_carried": int((maps["entity"] >= 0).sum()),
+             "entity_fresh": int((maps["entity"] < 0).sum()),
+             "relation_carried": int((maps["relation"] >= 0).sum()),
+             "relation_fresh": int((maps["relation"] < 0).sum()),
+             "tables_carried": 0, "tables_fresh": 0}
+    for name, table in fresh.items():
+        role = roles.get(name)
+        prev = prev_params.get(name)
+        if role is None or prev is None:
+            out[name] = table
+            stats["tables_fresh"] += 1
+            continue
+        prev = jnp.asarray(prev)
+        mapping = maps[role]
+        if (prev.ndim != table.ndim or prev.shape[1:] != table.shape[1:]
+                or mapping.shape[0] != table.shape[0]):
+            out[name] = table
+            stats["tables_fresh"] += 1
+            continue
+        carried = prev[jnp.clip(jnp.asarray(mapping), 0, prev.shape[0] - 1)]
+        keep = (jnp.asarray(mapping) >= 0).reshape(
+            (-1,) + (1,) * (table.ndim - 1))
+        out[name] = jnp.where(keep, carried.astype(table.dtype), table)
+        stats["tables_carried"] += 1
+    return out, stats

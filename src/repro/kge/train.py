@@ -19,7 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..data.triples import TripleLoader
 from ..optim import OPTIMIZERS, Optimizer
-from .base import KGEModel, Params
+from .base import KGEModel, Params, remap_params
 from .losses import get_loss
 from .negatives import corrupt
 
@@ -94,6 +94,27 @@ class KGETrainer:
         if self._param_sh is not None:
             params = jax.device_put(params, self._param_sh)
         return params, self.optimizer.init(params)
+
+    def warm_init(
+        self,
+        prev_params: Params,
+        entity_map: np.ndarray,
+        relation_map: np.ndarray,
+        seed: Optional[int] = None,
+    ) -> Tuple[Params, Any, Dict[str, int]]:
+        """Init from a previous version's params remapped onto this model's
+        vocabulary (see :func:`repro.kge.base.remap_params`): surviving rows
+        carried, new rows fresh, removed rows dropped. Optimizer state is
+        fresh — the old moments index the old row space.
+
+        Returns (params, opt_state, carry_stats).
+        """
+        key = jax.random.key(self.cfg.seed if seed is None else seed)
+        params, stats = remap_params(self.model, key, prev_params,
+                                     entity_map, relation_map)
+        if self._param_sh is not None:
+            params = jax.device_put(params, self._param_sh)
+        return params, self.optimizer.init(params), stats
 
     def fit(
         self,

@@ -1,9 +1,10 @@
+from .delta import GraphDelta
 from .graph import KnowledgeGraph, TermMeta, Triple
 from .obo import load_obo, parse_obo, save_obo, write_obo
 from .synthetic import GO_SPEC, HP_SPEC, OntologySpec, evolve, generate, release_series
 
 __all__ = [
-    "KnowledgeGraph", "TermMeta", "Triple",
+    "GraphDelta", "KnowledgeGraph", "TermMeta", "Triple",
     "load_obo", "parse_obo", "save_obo", "write_obo",
     "GO_SPEC", "HP_SPEC", "OntologySpec", "evolve", "generate", "release_series",
 ]

@@ -125,8 +125,16 @@ def evolve(
     add_frac: float = 0.04,
     obsolete_frac: float = 0.01,
     rewire_frac: float = 0.02,
+    relabel_frac: float = 0.0,
 ) -> KnowledgeGraph:
-    """Produce the next release: add terms, obsolete some, rewire edges."""
+    """Produce the next release: add terms, obsolete some, rewire edges,
+    and optionally rename a fraction of surviving terms (GO curation fixes
+    labels without touching the graph — a relabel-only delta).
+
+    The fractions are the churn dials: tests and benchmarks tune them to
+    generate release series with *known* ``GraphDelta`` composition (e.g.
+    ≤10% churn for the warm-start benchmark).
+    """
     rng = np.random.default_rng(seed)
     terms = dict(kg.terms)
     triples = kg.string_triples()
@@ -138,7 +146,8 @@ def evolve(
     n_obs = int(len(terms) * obsolete_frac)
     for ident in list(rng.permutation(leaves))[:n_obs]:
         meta = terms[ident]
-        terms[ident] = TermMeta(meta.identifier, f"obsolete {meta.label}", meta.namespace, True)
+        terms[ident] = TermMeta(meta.identifier, f"obsolete {meta.label}",
+                                meta.namespace, True, meta.definition)
         triples = [t for t in triples if t[0] != ident and t[2] != ident]
 
     # --- rewire a fraction of is_a edges -------------------------------- #
@@ -152,6 +161,18 @@ def evolve(
                 t = same_ns[int(rng.integers(len(same_ns)))]
         new_triples.append((h, r, t))
     triples = new_triples
+
+    # --- relabel surviving non-root terms (curation label fixes) -------- #
+    n_relabel = int(len(terms) * relabel_frac)
+    if n_relabel:
+        n_roots = len(spec.namespaces)
+        roots = {f"{spec.prefix}:{i:07d}" for i in range(n_roots)}
+        candidates = [i for i in live if i not in roots]
+        for ident in list(rng.permutation(candidates))[:n_relabel]:
+            meta = terms[ident]
+            terms[ident] = TermMeta(meta.identifier, _label(rng),
+                                    meta.namespace, meta.obsolete,
+                                    meta.definition)
 
     # --- add new terms under random live parents ------------------------ #
     n_add = int(len(terms) * add_frac)
@@ -170,9 +191,15 @@ def evolve(
 
 
 def release_series(
-    spec: OntologySpec, n_versions: int, seed: int = 0, n_terms: Optional[int] = None
+    spec: OntologySpec, n_versions: int, seed: int = 0,
+    n_terms: Optional[int] = None, **evolve_kwargs,
 ) -> List[Tuple[str, KnowledgeGraph]]:
-    """A dated series of releases, like GO's monthly channel."""
+    """A dated series of releases, like GO's monthly channel.
+
+    ``evolve_kwargs`` (add_frac, obsolete_frac, rewire_frac, relabel_frac)
+    pass through to :func:`evolve`, so callers can dial the per-release
+    churn — the warm-start benchmark uses a low-churn series.
+    """
     out: List[Tuple[str, KnowledgeGraph]] = []
     kg = generate(spec, seed=seed, n_terms=n_terms)
     for v in range(n_versions):
@@ -181,5 +208,5 @@ def release_series(
         tag = f"{year}-{month:02d}-01"
         out.append((tag, kg))
         if v + 1 < n_versions:
-            kg = evolve(kg, spec, seed=seed + 1000 + v)
+            kg = evolve(kg, spec, seed=seed + 1000 + v, **evolve_kwargs)
     return out

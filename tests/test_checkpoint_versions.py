@@ -1,0 +1,69 @@
+"""version_sort_key / SnapshotStore.versions edge cases: mixed alphanumeric
+tags, and agreement between the store's ordering and FileReleaseChannel's."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import SnapshotStore, version_sort_key
+from repro.core.updater import FileReleaseChannel
+from repro.ontology import obo
+
+
+def test_sort_key_numeric_runs():
+    assert version_sort_key("2024-10") > version_sort_key("2024-9")
+    assert version_sort_key("v10") > version_sort_key("v2")
+    assert version_sort_key("2024-01-02") > version_sort_key("2024-01-01")
+
+
+def test_sort_key_mixed_alphanumeric():
+    # an rc suffix sorts after the plain release of the same month
+    assert version_sort_key("2024-10-rc1") > version_sort_key("2024-10")
+    assert version_sort_key("2024-10-rc2") > version_sort_key("2024-10-rc1")
+    assert version_sort_key("2024-10-rc10") > version_sort_key("2024-10-rc2")
+    # but before the next month
+    assert version_sort_key("2024-11") > version_sort_key("2024-10-rc1")
+
+
+def test_sort_key_never_compares_int_to_str():
+    """re.split alternates str/int positions, so tuple comparison is always
+    str-vs-str or int-vs-int — no TypeError on any tag mix."""
+    tags = ["2024-10", "2024-9", "v2", "v10", "release", "1", "a1b", "a-b",
+            "2024-10-rc1", "", "10a", "a10"]
+    assert sorted(tags, key=version_sort_key)   # must not raise
+
+
+def test_store_versions_mixed_tags(tmp_path):
+    store = SnapshotStore(tmp_path / "s")
+    tags = ["2024-10-rc1", "2024-10", "2024-9", "v10", "v2"]
+    for v in tags:
+        store.save("go", v, "transe",
+                   {"embeddings": np.zeros((1, 2), np.float32)}, {})
+    assert store.versions("go") == ["2024-9", "2024-10", "2024-10-rc1",
+                                    "v2", "v10"]
+    assert store.latest_version("go") == "v10"
+
+
+def test_store_and_channel_agree_on_latest(tmp_path, tiny_go):
+    """FileReleaseChannel and SnapshotStore use the same key, so the release
+    the channel calls 'latest' is the version the store calls 'latest' —
+    the updater's checksum compare relies on this agreement."""
+    d = tmp_path / "releases"
+    d.mkdir()
+    store = SnapshotStore(tmp_path / "snap")
+    tags = ["2024-9", "2024-10", "2024-10-rc1", "2023-12"]
+    for v in tags:
+        obo.save_obo(tiny_go, d / f"{v}.obo", header_version=v)
+        store.save("go", v, "transe",
+                   {"embeddings": np.zeros((1, 2), np.float32)}, {})
+    ch = FileReleaseChannel("go", d)
+    latest_tag, _ = ch.latest()
+    assert latest_tag == store.latest_version("go") == "2024-10-rc1"
+
+
+def test_store_versions_empty_and_single(tmp_path):
+    store = SnapshotStore(tmp_path / "s")
+    assert store.versions("go") == []
+    assert store.latest_version("go") is None
+    store.save("go", "2024-10", "transe",
+               {"embeddings": np.zeros((1, 2), np.float32)}, {})
+    assert store.versions("go") == ["2024-10"]
+    assert store.latest_version("go") == "2024-10"

@@ -1,0 +1,95 @@
+"""GraphDelta: exact diffs between ontology releases + churn policy signal."""
+import numpy as np
+import pytest
+
+from repro.ontology import GraphDelta, KnowledgeGraph, TermMeta
+from repro.ontology.synthetic import GO_SPEC, HP_SPEC, evolve, generate, release_series
+
+
+def _kg(triples, labels=None):
+    terms = {}
+    for h, _, t in triples:
+        for e in (h, t):
+            terms.setdefault(e, TermMeta(e, (labels or {}).get(e, f"label {e}")))
+    return KnowledgeGraph.from_triples(triples, terms)
+
+
+def test_identity_delta_is_empty(tiny_go):
+    d = GraphDelta.compute(tiny_go, tiny_go)
+    assert d.is_empty
+    assert d.churn_fraction == 0.0
+    assert d.stats()["touched_entities"] == 0
+
+
+def test_known_delta_counts():
+    old = _kg([("A", "is_a", "B"), ("C", "is_a", "B"), ("C", "part_of", "A")])
+    new = _kg([("A", "is_a", "B"), ("D", "is_a", "B"), ("D", "regulates", "A")],
+              labels={"A": "renamed a"})
+    d = GraphDelta.compute(old, new)
+    assert d.added_entities == ["D"]
+    assert d.removed_entities == ["C"]
+    assert d.relabeled_entities == ["A"]
+    assert d.added_relations == ["regulates"]
+    assert d.removed_relations == ["part_of"]
+    assert ("D", "is_a", "B") in d.added_triples
+    assert ("C", "is_a", "B") in d.removed_triples
+    # touched: A (relabel + triple endpoints), C, D — B is an endpoint of
+    # both added and removed is_a triples, so it's touched too
+    assert set(d.touched_entities) == {"A", "B", "C", "D"}
+    assert d.n_universe == 4
+    assert d.churn_fraction == 1.0
+
+
+def test_delta_is_antisymmetric(tiny_go):
+    kg2 = evolve(tiny_go, GO_SPEC, seed=11)
+    fwd = GraphDelta.compute(tiny_go, kg2)
+    bwd = GraphDelta.compute(kg2, tiny_go)
+    assert fwd.added_entities == bwd.removed_entities
+    assert fwd.removed_entities == bwd.added_entities
+    assert fwd.added_triples == bwd.removed_triples
+    assert fwd.churn_fraction == bwd.churn_fraction
+    assert not fwd.is_empty
+
+
+def test_delta_stable_under_id_shift():
+    """Inserting an entity early in sort order shifts every integer id;
+    the string-level delta must see only the insertion."""
+    old = _kg([("M:2", "is_a", "M:9")])
+    new = _kg([("M:2", "is_a", "M:9"), ("M:0", "is_a", "M:2")])
+    d = GraphDelta.compute(old, new)
+    assert d.added_entities == ["M:0"]
+    assert d.removed_entities == []
+    assert d.added_triples == [("M:0", "is_a", "M:2")]
+    assert d.removed_triples == []
+
+
+def test_evolve_relabel_frac_generates_relabels(tiny_go):
+    kg2 = evolve(tiny_go, GO_SPEC, seed=5, add_frac=0.0, obsolete_frac=0.0,
+                 rewire_frac=0.0, relabel_frac=0.05)
+    d = GraphDelta.compute(tiny_go, kg2)
+    assert len(d.relabeled_entities) >= 1
+    assert d.added_entities == [] and d.removed_entities == []
+    assert d.added_triples == [] and d.removed_triples == []
+    # relabel-only churn: exactly the renamed terms
+    assert d.stats()["touched_entities"] == len(d.relabeled_entities)
+
+
+def test_release_series_low_churn_knobs():
+    """The warm-start benchmark's contract: evolve fracs dial the churn."""
+    series = release_series(GO_SPEC, 3, seed=0, n_terms=300,
+                            add_frac=0.02, obsolete_frac=0.005,
+                            rewire_frac=0.005)
+    for (_, prev), (_, cur) in zip(series, series[1:]):
+        d = GraphDelta.compute(prev, cur)
+        assert 0.0 < d.churn_fraction <= 0.10, d.stats()
+
+
+def test_release_series_passthrough_changes_series():
+    calm = release_series(HP_SPEC, 2, seed=3, n_terms=80, add_frac=0.01,
+                          obsolete_frac=0.0, rewire_frac=0.0)
+    wild = release_series(HP_SPEC, 2, seed=3, n_terms=80, add_frac=0.2,
+                          obsolete_frac=0.0, rewire_frac=0.0)
+    d_calm = GraphDelta.compute(calm[0][1], calm[1][1])
+    d_wild = GraphDelta.compute(wild[0][1], wild[1][1])
+    assert len(d_wild.added_entities) > len(d_calm.added_entities)
+    assert d_wild.churn_fraction > d_calm.churn_fraction

@@ -1,0 +1,149 @@
+"""Vocab remapping + warm-start param carry-over for all six KGE models."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import corpus, skipgram_pairs, token_vocab
+from repro.kge import make_model, remap_params, vocab_remap
+from repro.kge.train import KGETrainer, TrainConfig, make_train_step
+from repro.ontology.synthetic import GO_SPEC, evolve, generate
+
+ALL_MODELS = ("transe", "transr", "distmult", "hole", "boxe", "rdf2vec")
+
+
+# --------------------------- vocab_remap --------------------------- #
+def test_vocab_remap_by_name():
+    old = ["A", "B", "C", "D"]
+    new = ["B", "E", "A"]
+    m = vocab_remap(old, new)
+    assert m.tolist() == [1, -1, 0]
+    assert m.dtype == np.int32
+
+
+def test_vocab_remap_disjoint_and_empty():
+    assert vocab_remap([], ["X"]).tolist() == [-1]
+    assert vocab_remap(["X"], []).tolist() == []
+    assert vocab_remap(["A"], ["B", "C"]).tolist() == [-1, -1]
+
+
+def test_token_vocab_alignment(tiny_go):
+    """token_vocab names must align with corpus() integer ids."""
+    toks = token_vocab(tiny_go)
+    _, vocab_size, pad = corpus(tiny_go, jax.random.key(0),
+                                walks_per_entity=1, walk_length=2)
+    assert len(toks) == vocab_size
+    assert toks[pad] == "%pad%"
+    assert toks[: tiny_go.num_entities] == tiny_go.entities
+    assert toks[tiny_go.num_entities].startswith("%rel%")
+
+
+# --------------------------- remap_params --------------------------- #
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_remap_carries_surviving_rows(name):
+    n_old, n_new, n_rel, dim = 12, 13, 3, 8
+    old = make_model(name, n_old, n_rel, dim=dim)
+    prev = old.init(jax.random.key(0))
+    # entity 0 removed, new entity appended at row 5, rest shifted
+    e_map = np.asarray([1, 2, 3, 4, -1, 5, 6, 7, 8, 9, 10, 11, -1], np.int32)
+    r_map = np.asarray([0, 2, -1], np.int32)
+    new = make_model(name, n_new, n_rel, dim=dim)
+    params, stats = remap_params(new, jax.random.key(1), prev, e_map, r_map)
+    roles = new.param_roles()
+    assert stats["entity_carried"] == 11 and stats["entity_fresh"] == 2
+    assert stats["tables_carried"] >= 1
+    for pname, table in params.items():
+        role = roles[pname]
+        if role is None:
+            continue
+        mapping = e_map if role == "entity" else r_map
+        prev_t = np.asarray(prev[pname])
+        new_t = np.asarray(table)
+        assert new_t.shape[0] == len(mapping)
+        for i, src in enumerate(mapping):
+            if src >= 0:
+                np.testing.assert_array_equal(
+                    new_t[i], prev_t[src],
+                    err_msg=f"{name}.{pname} row {i} (from old {src})")
+
+
+def test_remap_fresh_rows_differ_from_any_old_row():
+    old = make_model("transe", 6, 1, dim=8)
+    prev = old.init(jax.random.key(0))
+    e_map = np.asarray([0, 1, 2, -1], np.int32)
+    new = make_model("transe", 4, 1, dim=8)
+    params, _ = remap_params(new, jax.random.key(99), prev, e_map,
+                             np.asarray([0], np.int32))
+    fresh_row = np.asarray(params["entity"][3])
+    for r in np.asarray(prev["entity"]):
+        assert not np.allclose(fresh_row, r)
+
+
+def test_remap_dim_change_falls_back_to_fresh():
+    old = make_model("distmult", 5, 2, dim=8)
+    prev = old.init(jax.random.key(0))
+    new = make_model("distmult", 5, 2, dim=16)
+    params, stats = remap_params(new, jax.random.key(1), prev,
+                                 np.arange(5, dtype=np.int32),
+                                 np.arange(2, dtype=np.int32))
+    assert stats["tables_carried"] == 0
+    assert params["entity"].shape == (5, 16)
+
+
+def test_remap_missing_table_is_fresh():
+    new = make_model("boxe", 5, 2, dim=8)
+    params, stats = remap_params(new, jax.random.key(1), {"entity": np.zeros((5, 8))},
+                                 np.arange(5, dtype=np.int32),
+                                 np.arange(2, dtype=np.int32))
+    assert set(params) == set(new.init(jax.random.key(0)))
+    assert stats["tables_carried"] == 1      # only "entity" survived
+
+
+# --------------------------- warm_init ------------------------------ #
+def test_warm_init_beats_fresh_init_loss():
+    """A warm-started model must start with a lower training loss on the
+    evolved graph than a fresh init — the whole point of carrying params."""
+    kg1 = generate(GO_SPEC, seed=3, n_terms=80)
+    kg2 = evolve(kg1, GO_SPEC, seed=4)
+    cfg = TrainConfig(batch_size=128, num_negs=8, lr=5e-2, seed=0)
+    m1 = make_model("transe", kg1.num_entities, kg1.num_relations, dim=16)
+    t1 = KGETrainer(m1, cfg)
+    prev_params, _, _ = t1.fit(kg1.triples, steps=200)
+
+    m2 = make_model("transe", kg2.num_entities, kg2.num_relations, dim=16)
+    t2 = KGETrainer(m2, cfg)
+    e_map = vocab_remap(kg1.entities, kg2.entities)
+    r_map = vocab_remap(kg1.relations, kg2.relations)
+    warm, _, carry = t2.warm_init(prev_params, e_map, r_map)
+    assert carry["entity_carried"] >= int(0.9 * kg2.num_entities)
+    cold, _ = t2.init()
+
+    _, loss_of = make_train_step(m2, t2.optimizer, cfg)
+    key = jax.random.key(42)
+    import jax.numpy as jnp
+    trips = jnp.asarray(kg2.triples)
+    warm_loss = float(loss_of(warm, trips, key))
+    cold_loss = float(loss_of(cold, trips, key))
+    assert warm_loss < cold_loss
+
+
+def test_warm_init_rdf2vec_token_carry():
+    kg1 = generate(GO_SPEC, seed=3, n_terms=60)
+    kg2 = evolve(kg1, GO_SPEC, seed=4)
+    toks1, toks2 = token_vocab(kg1), token_vocab(kg2)
+    cfg = TrainConfig(batch_size=64, num_negs=4, seed=0)
+    m1 = make_model("rdf2vec", len(toks1), 1, dim=8)
+    prev = m1.init(jax.random.key(0))
+    m2 = make_model("rdf2vec", len(toks2), 1, dim=8)
+    t2 = KGETrainer(m2, cfg)
+    e_map = vocab_remap(toks1, toks2)
+    params, _, carry = t2.warm_init(prev, e_map, np.full(1, -1, np.int32))
+    # both SGNS matrices are token-rowed; surviving tokens carry both
+    surv = [i for i, s in enumerate(e_map) if s >= 0]
+    assert len(surv) >= kg1.num_entities - 5
+    i = surv[0]
+    np.testing.assert_array_equal(np.asarray(params["entity"][i]),
+                                  np.asarray(prev["entity"][e_map[i]]))
+    np.testing.assert_array_equal(np.asarray(params["context"][i]),
+                                  np.asarray(prev["context"][e_map[i]]))
+    # pad token survives by name
+    assert e_map[toks2.index("%pad%")] == toks1.index("%pad%")
