@@ -26,6 +26,11 @@ corresponds to a system capability it claims:
                       wall-clock speedup (floor: 2x mid-series) + link-
                       prediction MRR parity (benchmarks/bench_update.py),
                       written to results/BENCH_update.json
+  B8 gateway          batched gateway vs direct per-call ServingEngine at
+                      16 concurrent clients (floor: 2x), plus the async
+                      front end vs threaded tickets (floor: 0.9x)
+                      (benchmarks/bench_gateway.py), written to
+                      results/BENCH_gateway.json
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run                # full benchmarks
@@ -256,13 +261,22 @@ def run_smoke() -> int:
     upd = bench_update.run(fast=True)
     bench_update.write_results(
         {bench_update.section_key(True) + "_smoke": upd})
-    ok = tests.returncode == 0 and s16 >= FLOOR and upd["pass"]
+    print("[smoke] gateway bucket: batched gateway vs direct per-call")
+    from benchmarks import bench_gateway
+    gwy = bench_gateway.run(fast=True)
+    bench_gateway.write_results(
+        {bench_gateway.section_key(True) + "_smoke": gwy})
+    ok = (tests.returncode == 0 and s16 >= FLOOR and upd["pass"]
+          and gwy["pass"])
     print(f"[smoke] {'PASS' if ok else 'FAIL'}: tests "
           f"exit={tests.returncode}, 16-thread speedup={s16:.2f}x "
           f"(floor {FLOOR}x), warm update "
           f"{bench_update.floor_speedup(upd):.2f}x "
           f"(floor {upd['floor']}x, parity "
-          f"{bench_update.quality_parity(upd)})")
+          f"{bench_update.quality_parity(upd)}), gateway "
+          f"{bench_gateway.floor_speedup(gwy):.2f}x direct / async "
+          f"{bench_gateway.async_ratio(gwy):.2f}x threaded "
+          f"(floors {bench_gateway.FLOOR}x / {bench_gateway.ASYNC_RATIO}x)")
     return 0 if ok else 1
 
 
@@ -273,7 +287,7 @@ def main():
                          "(fast test tier + one scheduler bench bucket)")
     ap.add_argument("--only", default=None,
                     choices=["kge", "serving", "update", "walks", "sched",
-                             "concurrent"])
+                             "concurrent", "gateway"])
     args = ap.parse_args()
 
     if args.fast and args.only is None:
@@ -317,6 +331,13 @@ def main():
             bench_concurrent.write_results(
                 {bench_concurrent.section_key(args.fast): conc})
             report["concurrent"] = conc
+        if args.only in (None, "gateway"):
+            print("[B8] gateway API throughput (batched vs direct, async)")
+            from benchmarks import bench_gateway
+            gwy = bench_gateway.run(fast=args.fast)
+            bench_gateway.write_results(
+                {bench_gateway.section_key(args.fast): gwy})
+            report["gateway"] = gwy
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

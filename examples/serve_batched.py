@@ -1,21 +1,30 @@
 """End-to-end concurrent serving driver (the paper's deployment kind):
 stand up the platform and push a multi-client workload through the
-future-based scheduler API.
+gateway API v1.
 
 Trains snapshots for BOTH ontologies (GO-like and HP-like), then fires a
-mixed stream of 300 requests across (ontology, model, endpoint) two ways:
+mixed stream of 300 closest-concepts requests three ways:
 
-  * solo      — one `closest_concepts` call per request (no batching);
-  * concurrent — four client threads, each submitting a burst of requests
-    (``tickets = [scheduler.submit(r) for r in burst]``) and blocking on
-    ``ticket.result()`` while the scheduler's background flush loop drains
+  * direct     — one deprecated ``engine.closest_concepts`` call per
+    request: the pre-gateway serving mode, no cross-client batching;
+  * concurrent — four client threads, each submitting a burst of
+    requests per simulated web request
+    (``gateway.closest_concepts_batch``: submit the wave, then collect)
+    against a shared ``Gateway`` whose background flush loop drains
     per-(ontology, model, version, k) queues under its deadline policy
     (``flush_after_ms`` or a full ``max_batch``, whichever first). No
     client ever calls ``flush()``; cross-client micro-batching is the
-    speedup.
+    speedup;
+  * async      — the same fan-out as coroutines:
+    ``await AsyncGateway.closest_concepts_many(...)`` rides the
+    loop-safe ticket bridge (PR 2's open async item, closed in PR 4).
+
+Also demos the wire surface: ``gateway.handle(route, payload)`` for the
+ops endpoints and a structured ApiError payload.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
+import asyncio
 import sys
 import tempfile
 import threading
@@ -26,8 +35,10 @@ import numpy as np
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+from repro.api import AsyncGateway, Gateway
+from repro.api.schema import ClosestConceptsRequest
 from repro.core.registry import EmbeddingRegistry
-from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
+from repro.core.serving import ServingEngine
 from repro.core.updater import Updater
 from repro.kge.train import TrainConfig
 from repro.ontology.synthetic import GO_SPEC, HP_SPEC, generate
@@ -40,7 +51,9 @@ def main():
     rng = np.random.default_rng(0)
     with tempfile.TemporaryDirectory() as td:
         registry = EmbeddingRegistry(td)
-        updater = Updater(registry, models=("transe", "distmult"), dim=100,
+        engine = ServingEngine(registry)
+        updater = Updater(registry, engine=engine,
+                          models=("transe", "distmult"), dim=100,
                           train_cfg=TrainConfig(batch_size=256, num_negs=8),
                           steps_override=60)
         graphs = {}
@@ -57,7 +70,16 @@ def main():
             print(f"[setup] {name}: trained {rep.trained_models} "
                   f"({kg.num_entities} classes) in {rep.wall_s:.1f}s")
 
-        engine = ServingEngine(registry)
+        gw = Gateway(engine, max_batch=64, flush_after_ms=1.0)
+
+        # the updater's invalidate flowed through the gateway hook: the
+        # ops endpoints already see both publishes
+        for ont in ("go", "hp"):
+            v = gw.handle(f"/versions/{ont}")
+            lin = gw.handle(f"/lineage/{ont}")
+            print(f"[ops] {ont}: versions={v['versions']} "
+                  f"models={v['models']} "
+                  f"lineage[transe].mode={lin['lineage']['transe']['mode']}")
 
         # -------- workload: 300 mixed top-k requests -------- #
         reqs = []
@@ -66,86 +88,105 @@ def main():
             mdl = rng.choice(["transe", "distmult"])
             q = graphs[ont].entities[int(rng.integers(
                 0, graphs[ont].num_entities))]
-            reqs.append(TopKRequest(ont, mdl, q, 10))
+            reqs.append(ClosestConceptsRequest(ont, mdl, q, 10))
 
-        # solo path
+        # warm every (table, padding-bucket) jit shape the workload can
+        # hit — up to max_batch, the async gather can fill full buckets —
+        # outside the timed regions: retraces would dominate them
+        for ont in ("go", "hp"):
+            for mdl in ("transe", "distmult"):
+                b = 1
+                while b <= 64:
+                    gw.closest_concepts_batch(
+                        [ClosestConceptsRequest(
+                            ont, mdl, graphs[ont].entities[i % 50])
+                         for i in range(b)])
+                    b <<= 1
+        warm_stats = dict(gw.scheduler.stats)  # report only the timed region
+
+        # direct path: the deprecated per-call engine surface
         t0 = time.perf_counter()
         lat = []
         for r in reqs:
             t1 = time.perf_counter()
             engine.closest_concepts(r.ontology, r.model, r.query, r.k)
             lat.append(time.perf_counter() - t1)
-        t_solo = time.perf_counter() - t0
+        t_direct = time.perf_counter() - t0
         lat = np.array(lat) * 1e3
 
-        # concurrent path: 4 clients firing bursts at the flush loop
+        # concurrent path: 4 threads calling the gateway against the loop
         clat = []
         clat_lock = threading.Lock()
-        first_ticket = {}
+        sample = {}
 
         def client(cid, my_reqs):
             mine = []
             for i in range(0, len(my_reqs), BURST):
                 burst = my_reqs[i:i + BURST]
                 t1 = time.perf_counter()
-                tickets = [sched.submit(r) for r in burst]  # future Tickets
-                if cid == 0 and not first_ticket:
-                    first_ticket[0] = tickets[0]
-                for t in tickets:
-                    t.result(timeout=60)       # the loop resolves them
+                resps = gw.closest_concepts_batch(burst)  # one wave
+                if cid == 0 and not sample:
+                    sample[0] = resps[0]
                 dt = (time.perf_counter() - t1) / len(burst)
                 mine.extend([dt] * len(burst))
             with clat_lock:
                 clat.extend(mine)
 
-        with BatchScheduler(engine, max_batch=64,
-                            flush_after_ms=1.0) as sched:
-            # warm every (table, padding-bucket) jit shape the workload can
-            # hit, outside the timed region — retraces would dominate it
-            for ont in ("go", "hp"):
-                for mdl in ("transe", "distmult"):
-                    b = 1
-                    while b <= 32:
-                        warm = [sched.submit(TopKRequest(
-                            ont, mdl, graphs[ont].entities[i % 50], 10))
-                            for i in range(b)]
-                        for t in warm:
-                            t.result(timeout=60)
-                        b <<= 1
-            warm_stats = dict(sched.stats)   # report only the timed region
-            t0 = time.perf_counter()
-            chunks = [reqs[i::N_CLIENTS] for i in range(N_CLIENTS)]
-            workers = [threading.Thread(target=client, args=(i, c))
-                       for i, c in enumerate(chunks)]
-            for w in workers:
-                w.start()
-            for w in workers:
-                w.join()
-            t_conc = time.perf_counter() - t0
-        assert len(clat) == len(reqs) and not sched.errors
-        assert sched.stats["resolved"] == sched.stats["submitted"]
+        t0 = time.perf_counter()
+        chunks = [reqs[i::N_CLIENTS] for i in range(N_CLIENTS)]
+        workers = [threading.Thread(target=client, args=(i, c))
+                   for i, c in enumerate(chunks)]
+        for w in workers:
+            w.start()
+        for w in workers:
+            w.join()
+        t_conc = time.perf_counter() - t0
+        assert len(clat) == len(reqs)
         clat = np.array(clat) * 1e3
+        # snapshot NOW: the async run below shares the scheduler, and its
+        # requests must not inflate the concurrent-mode batching report
+        run_stats = {k: gw.scheduler.stats[k] - warm_stats[k]
+                     for k in warm_stats}
 
-        print(f"\n[serve] solo:       {t_solo:.2f}s total, "
+        # async path: the same 300 requests as one gather fan-out
+        ag = AsyncGateway(gw)
+
+        async def async_run():
+            return await ag.closest_concepts_many(reqs)
+
+        t0 = time.perf_counter()
+        ares = asyncio.run(async_run())
+        t_async = time.perf_counter() - t0
+        assert len(ares) == len(reqs)
+
+        assert gw.scheduler.stats["resolved"] == gw.scheduler.stats["submitted"]
+
+        print(f"\n[serve] direct:     {t_direct:.2f}s total, "
               f"p50={np.percentile(lat, 50):.2f}ms "
               f"p99={np.percentile(lat, 99):.2f}ms")
-        run_stats = {k: sched.stats[k] - warm_stats[k] for k in sched.stats}
         print(f"[serve] concurrent: {t_conc:.2f}s total "
-              f"({t_solo / t_conc:.1f}x) — {N_CLIENTS} clients blocking on "
-              f"ticket.result(), flush loop draining "
+              f"({t_direct / t_conc:.1f}x) — {N_CLIENTS} clients bursting "
+              f"closest_concepts_batch({BURST}), flush loop draining "
               f"(ontology, model, version, k) queues: "
               f"{run_stats['batches']} kernel calls "
               f"({run_stats['full_flushes']} full / "
               f"{run_stats['deadline_flushes']} deadline flushes), "
               f"p50={np.percentile(clat, 50):.2f}ms "
               f"p99={np.percentile(clat, 99):.2f}ms")
+        print(f"[serve] async:      {t_async:.2f}s total "
+              f"({t_direct / t_async:.1f}x) — one asyncio.gather over "
+              f"{len(reqs)} awaitables")
         print(f"[serve] index cache: {engine.cache_stats()}")
 
-        sample_ticket = first_ticket[0]
-        print(f"\nsample: top-3 from ticket {sample_ticket.id} "
-              f"(version {sample_ticket.version})")
-        for c in sample_ticket.result()[:3]:
+        # -------- the wire surface, including a structured error -------- #
+        err = gw.handle("/sim/go/transe", {"a": "BOGUS-1", "b": "BOGUS-2"})
+        print(f"\n[wire] error payload: code={err['code']} "
+              f"status={err['status']} missing={err['details']['missing']}")
+        resp = sample[0]
+        print(f"sample: top-3 for {resp.query} (version {resp.version})")
+        for c in resp.results[:3]:
             print(f"  {c.score:+.4f} {c.identifier} {c.label[:40]}")
+        gw.close()
     print("\nOK")
 
 

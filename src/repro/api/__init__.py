@@ -1,0 +1,64 @@
+"""Bio-KGvec2go gateway API v1 — the public surface of the service.
+
+The paper's contribution is a *Web API* over versioned biomedical KG
+embeddings (Portisch et al.'s KGvec2go design, extended with dynamic
+versioning). This package is that API, transport-agnostic: a
+:class:`Gateway` dispatches route strings to typed handlers, every
+similarity-shaped read rides the ``BatchScheduler`` (PR 2's concurrent
+runtime), and :class:`AsyncGateway` exposes the same surface as
+awaitables. An HTTP layer is a thin shim over ``Gateway.handle``.
+
+Paper endpoint -> route -> schema types:
+
+=================  ====================================  =========================================================
+endpoint (paper)   route                                 request -> response
+=================  ====================================  =========================================================
+get-vector         ``/get-vector/{ontology}/{model}``    ``GetVectorRequest`` -> ``VectorResponse``
+similarity         ``/sim/{ontology}/{model}``           ``SimilarityRequest`` -> ``SimilarityResponse``
+closest concepts   ``/closest-concepts/{onto}/{model}``  ``ClosestConceptsRequest`` -> ``ClosestConceptsResponse``
+download           ``/download/{ontology}/{model}``      ``DownloadRequest`` -> ``DownloadPage`` (cursor-paginated)
+autocomplete       ``/autocomplete/{ontology}/{model}``  ``AutocompleteRequest`` -> ``AutocompleteResponse``
+=================  ====================================  =========================================================
+
+Ops endpoints (not in the paper, required to run it as a service):
+
+=========  ==========================  ===================================
+endpoint   route                       request -> response
+=========  ==========================  ===================================
+health     ``/health``                 ``HealthRequest`` -> ``HealthResponse``
+stats      ``/stats``                  ``StatsRequest`` -> ``StatsResponse``
+versions   ``/versions/{ontology}``    ``VersionsRequest`` -> ``VersionsResponse``
+lineage    ``/lineage/{ontology}``     ``LineageRequest`` -> ``LineageResponse``
+=========  ==========================  ===================================
+
+Failures are structured: :class:`ApiError` with a stable code
+(``UNKNOWN_ONTOLOGY``, ``UNKNOWN_MODEL``, ``UNKNOWN_VERSION``,
+``UNKNOWN_CLASS``, ``BAD_REQUEST``, ``TIMEOUT``, ``SHUTTING_DOWN``,
+``INTERNAL``), an HTTP-ish status, and machine-readable ``details``
+(e.g. the *full* list of unresolvable class names). ``to_wire`` /
+``from_wire`` round-trip every request, response and error through
+plain JSON-able dicts.
+"""
+from .aio import AsyncGateway, ticket_future
+from .gateway import API_VERSION, Gateway
+from .schema import (CODE_STATUS, ApiError, AutocompleteRequest,
+                     AutocompleteResponse, ClosestConceptsRequest,
+                     ClosestConceptsResponse, ConceptHit, DownloadPage,
+                     DownloadRequest, GetVectorRequest, HealthRequest,
+                     HealthResponse, LineageRequest, LineageResponse,
+                     SimilarityRequest, SimilarityResponse, StatsRequest,
+                     StatsResponse, VectorResponse, VersionsRequest,
+                     VersionsResponse, from_wire, payload_to, to_wire)
+
+__all__ = [
+    "API_VERSION", "AsyncGateway", "Gateway", "ticket_future",
+    "CODE_STATUS", "ApiError", "from_wire", "payload_to", "to_wire",
+    "GetVectorRequest", "VectorResponse",
+    "SimilarityRequest", "SimilarityResponse",
+    "ClosestConceptsRequest", "ClosestConceptsResponse", "ConceptHit",
+    "DownloadRequest", "DownloadPage",
+    "AutocompleteRequest", "AutocompleteResponse",
+    "HealthRequest", "HealthResponse", "StatsRequest", "StatsResponse",
+    "VersionsRequest", "VersionsResponse",
+    "LineageRequest", "LineageResponse",
+]

@@ -61,6 +61,12 @@ class SnapshotStore:
         metadata = json.loads((d / "metadata.json").read_text())
         return arrays, metadata
 
+    def load_metadata(self, ontology: str, version: str, model: str) -> Dict[str, Any]:
+        """The PROV/lineage sidecar alone — no tensor load (the gateway's
+        ``lineage`` endpoint reads many models per call)."""
+        d = self._dir(ontology, version, model)
+        return json.loads((d / "metadata.json").read_text())
+
     def exists(self, ontology: str, version: str, model: str) -> bool:
         return (self._dir(ontology, version, model) / "embeddings.npz").exists()
 

@@ -2,8 +2,8 @@
 from .provenance import prov_record, validate_prov
 from .registry import EmbeddingRegistry
 from .serving import (BatchScheduler, ClosestConcept, EmbeddingIndex,
-                      LRUIndexCache, SchedulerError, ServingEngine, Ticket,
-                      TopKRequest)
+                      LRUIndexCache, SchedulerError, ServingEngine,
+                      SimRequest, Ticket, TopKRequest)
 from .updater import (PAPER_MODELS, FileReleaseChannel, ReleaseChannel,
                       SyntheticReleaseChannel, UpdatePlan, UpdateReport,
                       Updater, poll_loop)
@@ -11,7 +11,7 @@ from .updater import (PAPER_MODELS, FileReleaseChannel, ReleaseChannel,
 __all__ = [
     "prov_record", "validate_prov", "EmbeddingRegistry",
     "BatchScheduler", "ClosestConcept", "EmbeddingIndex", "LRUIndexCache",
-    "SchedulerError", "ServingEngine", "Ticket", "TopKRequest",
+    "SchedulerError", "ServingEngine", "SimRequest", "Ticket", "TopKRequest",
     "PAPER_MODELS", "FileReleaseChannel", "ReleaseChannel",
     "SyntheticReleaseChannel", "UpdatePlan", "UpdateReport", "Updater",
     "poll_loop",

@@ -1,6 +1,6 @@
 """The Bio-KGvec2go serving subsystem.
 
-Implements the paper's three API functionalities, in-process (the container
+Implements the paper's API functionalities, in-process (the container
 has no network; the Flask layer in the paper is a thin shim over exactly
 these calls):
 
@@ -9,6 +9,13 @@ these calls):
                         with case/whitespace normalization);
   * ``closest_concepts`` — top-k most similar classes, ranked table with
                         identifier, label, score and exploration URL.
+
+As of PR 4 the *public* surface is ``repro.api.Gateway``
+(``engine.gateway()``): route dispatch, typed wire schema, structured
+``ApiError`` codes, cursor-paginated download, and an async front end.
+The ``ServingEngine`` endpoint methods below survive as thin deprecated
+delegates; the scheduler additionally batches pair-similarity reads
+(``SimRequest``) so the gateway's ``sim`` endpoint coalesces too.
 
 Architecture (PR 1 hardening — see ROADMAP.md "Serving architecture"):
 
@@ -187,8 +194,11 @@ class EmbeddingIndex:
     def similarity(self, a: str, b: str) -> float:
         ra, rb = self.resolve(a), self.resolve(b)
         if ra is None or rb is None:
-            missing = a if ra is None else b
-            raise KeyError(f"unknown class {missing!r}")
+            # report EVERY unresolvable name, not just the first: a client
+            # fixing one typo at a time is the paper's UX anti-pattern
+            missing = [q for q, r in ((a, ra), (b, rb)) if r is None]
+            raise KeyError(
+                "unknown class(es): " + ", ".join(repr(m) for m in missing))
         return float(np.dot(self.unit[ra], self.unit[rb]))
 
     def top_k(self, queries: Sequence[str], k: int = 10,
@@ -314,6 +324,12 @@ class ServingEngine:
         self.mesh = mesh
         self._latest: Dict[str, str] = {}
         self._lock = threading.Lock()
+        #: callbacks fired (outside the lock) after every latest-pointer
+        #: swap — the gateway subscribes so versions/lineage caches track
+        #: publishes immediately
+        self._invalidate_listeners: List = []
+        self._default_gateway = None
+        self._gw_lock = threading.Lock()
 
     # ------------------------- version resolution ---------------------- #
     def latest_version(self, ontology: str) -> str:
@@ -344,50 +360,137 @@ class ServingEngine:
                    ) -> Optional[str]:
         """Atomic latest-pointer swap, called by the updater after a
         publish. Old-version indices are NOT dropped — version-pinned
-        in-flight queries keep working; the LRU ages them out."""
+        in-flight queries keep working; the LRU ages them out. Registered
+        invalidate listeners (the gateway's versions/lineage caches) are
+        notified after the swap."""
         v = new_version or self.registry.store.latest_version(ontology)
         with self._lock:
             if v is None:
                 self._latest.pop(ontology, None)
             else:
                 self._latest[ontology] = v
+            listeners = list(self._invalidate_listeners)
+        for fn in listeners:
+            try:
+                fn(ontology, v)
+            except Exception:
+                pass     # a broken listener must not break the updater
         return v
+
+    def add_invalidate_listener(self, fn) -> None:
+        """Register ``fn(ontology, new_version)`` to run after every
+        latest-pointer swap."""
+        with self._lock:
+            self._invalidate_listeners.append(fn)
+
+    def remove_invalidate_listener(self, fn) -> None:
+        """Unregister a listener (no-op if absent) — a closed gateway
+        must not stay reachable from, and mutated by, the engine."""
+        with self._lock:
+            try:
+                self._invalidate_listeners.remove(fn)
+            except ValueError:
+                pass
 
     def cache_stats(self) -> Dict[str, int]:
         return self.cache.stats()
 
-    # ------------------------- the three endpoints --------------------- #
+    # --------------------- the endpoints (deprecated) ------------------ #
+    # These are thin delegates kept for pre-PR 4 callers. The public
+    # surface is repro.api.Gateway — `engine.gateway()` — which routes
+    # similarity-shaped reads through the BatchScheduler, returns typed
+    # responses, and raises structured ApiErrors. The delegates translate
+    # ApiError back to the legacy KeyError/ValueError contract.
+
+    def gateway(self):
+        """This engine's default :class:`repro.api.Gateway` (lazily
+        built; synchronous flush mode — pair it with
+        ``scheduler.start()`` or a dedicated Gateway for loop mode)."""
+        gw = self._default_gateway
+        if gw is None:
+            from ..api.gateway import Gateway
+            with self._gw_lock:
+                if self._default_gateway is None:
+                    self._default_gateway = Gateway(self)
+                gw = self._default_gateway
+        return gw
+
+    def _legacy(self, call):
+        from ..api.schema import ApiError
+        try:
+            return call()
+        except ApiError as e:
+            raise e.legacy() from None
+
     def download(self, ontology: str, model: str,
                  version: Optional[str] = None) -> str:
-        return self.registry.to_json(ontology, model,
-                                     version or self.latest_version(ontology))
+        """Full download payload as one JSON string.
+
+        .. deprecated:: PR 4 — use ``engine.gateway().download(...)``,
+           which is cursor-paginated and returns a typed ``DownloadPage``.
+        """
+        def run():
+            gw = self.gateway()
+            page = gw.download(ontology, model, version=version,
+                               offset=0, limit=2048)
+            rows = list(page.rows)
+            while page.next_offset is not None:
+                page = gw.download(ontology, model, version=page.version,
+                                   offset=page.next_offset, limit=page.limit)
+                rows.extend(page.rows)
+            import json
+            return json.dumps({ident: vec for ident, vec in rows})
+        return self._legacy(run)
+
+    def get_vector(self, ontology: str, model: str, query: str,
+                   fuzzy: bool = False,
+                   version: Optional[str] = None) -> np.ndarray:
+        """The paper's ``get-vector`` endpoint (raw embedding row).
+
+        .. deprecated:: PR 4 — use ``engine.gateway().get_vector(...)``,
+           which returns a typed ``VectorResponse``.
+        """
+        return self._legacy(lambda: np.asarray(
+            self.gateway().get_vector(ontology, model, query, fuzzy=fuzzy,
+                                      version=version).vector,
+            dtype=np.float32))
 
     def similarity(self, ontology: str, model: str, a: str, b: str,
                    fuzzy: bool = False, version: Optional[str] = None) -> float:
-        idx = self._index(ontology, model, version)
-        if fuzzy:
-            ra, rb = idx.resolve(a, fuzzy=True), idx.resolve(b, fuzzy=True)
-            if ra is None or rb is None:
-                raise KeyError(f"unknown class {a if ra is None else b!r}")
-            return float(np.dot(idx.unit[ra], idx.unit[rb]))
-        return idx.similarity(a, b)
+        """Cosine similarity between two classes.
+
+        .. deprecated:: PR 4 — use ``engine.gateway().similarity(...)``.
+           This delegate routes through the gateway (and therefore the
+           BatchScheduler), then unwraps to the legacy float/KeyError
+           contract.
+        """
+        return self._legacy(lambda: self.gateway().similarity(
+            ontology, model, a, b, fuzzy=fuzzy, version=version).score)
 
     def closest_concepts(self, ontology: str, model: str, query: str,
                          k: int = 10, fuzzy: bool = False,
                          version: Optional[str] = None) -> List[ClosestConcept]:
-        idx = self._index(ontology, model, version)
-        if fuzzy:
-            row = idx.resolve(query, fuzzy=True)
-            if row is None:
-                raise KeyError(f"unknown class {query!r}")
-            query = idx.entity_ids[row]
-        return idx.top_k([query], k)[0]
+        """Top-k closest concepts.
 
-    # ---------------- paper §6 future work, implemented ---------------- #
+        .. deprecated:: PR 4 — use ``engine.gateway().closest_concepts``.
+           This delegate routes through the gateway's batch-first path,
+           then unwraps the typed response to the legacy list.
+        """
+        def run():
+            resp = self.gateway().closest_concepts(
+                ontology, model, query, k=k, fuzzy=fuzzy, version=version)
+            return [ClosestConcept(h.identifier, h.label, h.score, h.url)
+                    for h in resp.results]
+        return self._legacy(run)
+
     def autocomplete(self, ontology: str, model: str, prefix: str,
                      limit: int = 10, version: Optional[str] = None) -> List[str]:
-        """Concept-label autocomplete."""
-        return self._index(ontology, model, version).autocomplete(prefix, limit)
+        """Concept-label autocomplete (paper §6 future work).
+
+        .. deprecated:: PR 4 — use ``engine.gateway().autocomplete(...)``.
+        """
+        return self._legacy(lambda: self.gateway().autocomplete(
+            ontology, model, prefix, limit=limit, version=version).completions)
 
 
 @dataclasses.dataclass
@@ -397,6 +500,26 @@ class TopKRequest:
     query: str
     k: int = 10
     version: Optional[str] = None    # None = pin to latest at submit time
+    fuzzy: bool = False              # typo-tolerant query resolution
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """A pair-similarity read routed through the scheduler (PR 4): many
+    concurrent ``sim`` calls against the same (ontology, model, version)
+    coalesce into one vectorized pairwise-dot batch instead of each
+    taking a private index lookup."""
+    ontology: str
+    model: str
+    a: str
+    b: str
+    fuzzy: bool = False
+    version: Optional[str] = None
+
+
+#: queue-key slot marking pair-similarity queues (top-k queues use their
+#: real k >= 1, so -1 can never collide)
+_SIM_K = -1
 
 
 def _bucket_size(n: int, max_batch: int) -> int:
@@ -409,7 +532,19 @@ def _bucket_size(n: int, max_batch: int) -> int:
 
 class SchedulerError(RuntimeError):
     """Raised by ``Ticket.result()`` when the request failed (unknown
-    query/ontology/model/version, bad k, or a kernel error)."""
+    query/ontology/model/version, bad k, or a kernel error).
+
+    ``code`` / ``details`` carry the structured cause when the scheduler
+    knows it (stable ApiError codes — see ``repro.api.schema``), e.g.
+    ``code="UNKNOWN_CLASS", details={"missing": [...]}`` with *every*
+    unresolvable name; both are None/{} for unclassified faults.
+    """
+
+    def __init__(self, message: str, code: Optional[str] = None,
+                 details: Optional[Dict] = None):
+        super().__init__(message)
+        self.code = code
+        self.details = dict(details or {})
 
 
 @functools.total_ordering
@@ -423,7 +558,8 @@ class Ticket:
     directly as keys.
     """
 
-    __slots__ = ("id", "version", "_event", "_result", "_error")
+    __slots__ = ("id", "version", "_event", "_result", "_error",
+                 "_error_code", "_error_details", "_cb_lock", "_callbacks")
 
     def __init__(self, tid: int, version: Optional[str] = None):
         self.id = tid
@@ -431,20 +567,25 @@ class Ticket:
         #: before the version could be resolved)
         self.version = version
         self._event = threading.Event()
-        self._result: Optional[List[ClosestConcept]] = None
+        self._result = None          # List[ClosestConcept] or float (sim)
         self._error: Optional[str] = None
+        self._error_code: Optional[str] = None
+        self._error_details: Optional[Dict] = None
+        self._cb_lock = threading.Lock()
+        self._callbacks: List = []
 
     # --------------------------- future API ---------------------------- #
     def done(self) -> bool:
         return self._event.is_set()
 
-    def result(self, timeout: Optional[float] = None) -> List[ClosestConcept]:
+    def result(self, timeout: Optional[float] = None):
         """Block until resolved; raises SchedulerError if the request
         failed, TimeoutError if unresolved after ``timeout`` seconds."""
         if not self._event.wait(timeout):
             raise TimeoutError(f"ticket {self.id} unresolved after {timeout}s")
         if self._error is not None:
-            raise SchedulerError(self._error)
+            raise SchedulerError(self._error, self._error_code,
+                                 self._error_details)
         return self._result
 
     def exception(self, timeout: Optional[float] = None) -> Optional[str]:
@@ -453,21 +594,52 @@ class Ticket:
             raise TimeoutError(f"ticket {self.id} unresolved after {timeout}s")
         return self._error
 
+    def add_done_callback(self, fn) -> None:
+        """Call ``fn(self)`` once the ticket resolves — immediately if it
+        already has. Fires on whichever thread resolves the ticket, so
+        callbacks must be cheap and loop-safe (the async front end posts
+        through ``loop.call_soon_threadsafe``). Exceptions are swallowed:
+        a broken callback must not poison the flush loop."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        self._run_callback(fn)
+
+    def _run_callback(self, fn) -> None:
+        try:
+            fn(self)
+        except Exception:
+            pass
+
+    def _fire_callbacks(self) -> None:
+        with self._cb_lock:
+            cbs, self._callbacks = self._callbacks, []
+        for fn in cbs:
+            self._run_callback(fn)
+
     # --------------------- scheduler-internal ----------------------- #
-    def _resolve(self, result: List[ClosestConcept]) -> bool:
+    def _resolve(self, result) -> bool:
         """Returns False if the ticket was already resolved (never expected;
         the stress suite asserts the resolved counter stays exact)."""
         if self._event.is_set():
             return False
         self._result = result
-        self._event.set()
+        with self._cb_lock:
+            self._event.set()
+        self._fire_callbacks()
         return True
 
-    def _reject(self, message: str) -> bool:
+    def _reject(self, message: str, code: Optional[str] = None,
+                details: Optional[Dict] = None) -> bool:
         if self._event.is_set():
             return False
         self._error = message
-        self._event.set()
+        self._error_code = code
+        self._error_details = details
+        with self._cb_lock:
+            self._event.set()
+        self._fire_callbacks()
         return True
 
     # ---------------------------- int interop --------------------------- #
@@ -560,7 +732,7 @@ class BatchScheduler:
         self.errors: Dict[int, str] = {}
         self.stats = {"submitted": 0, "resolved": 0, "flushes": 0,
                       "loop_flushes": 0, "deadline_flushes": 0,
-                      "full_flushes": 0, "batches": 0,
+                      "full_flushes": 0, "batches": 0, "sim_batches": 0,
                       "padded_queries": 0, "failed": 0}
         if flush_after_ms is not None:
             self.start()
@@ -573,14 +745,19 @@ class BatchScheduler:
         while len(self.errors) > self.max_errors:
             self.errors.pop(next(iter(self.errors)))
 
-    def _reject_at_submit(self, ticket: Ticket, msg: str) -> Ticket:
+    def _reject_at_submit(self, ticket: Ticket, msg: str,
+                          code: Optional[str] = None,
+                          details: Optional[Dict] = None) -> Ticket:
         with self._lock:
             self._record_errors({ticket.id: msg})
-            if ticket._reject(msg):
+            if ticket._reject(msg, code, details):
                 self.stats["resolved"] += 1
         return ticket
 
-    def submit(self, req: TopKRequest) -> Ticket:
+    def submit(self, req) -> Ticket:
+        """Enqueue a :class:`TopKRequest` or :class:`SimRequest`; returns
+        its future-style Ticket (top-k tickets resolve to a ranked
+        ``List[ClosestConcept]``, sim tickets to a float score)."""
         with self._lock:
             tid = next(self._tickets)
             self.stats["submitted"] += 1
@@ -589,9 +766,22 @@ class BatchScheduler:
         except Exception as e:
             # unknown ontology — or any registry fault — fails only this
             # ticket, not the accept loop (and keeps resolved == submitted)
-            return self._reject_at_submit(Ticket(tid), str(e))
+            code = "UNKNOWN_ONTOLOGY" if isinstance(e, KeyError) else None
+            return self._reject_at_submit(
+                Ticket(tid), str(e), code,
+                {"ontology": req.ontology} if code else None)
         ticket = Ticket(tid, version=version)
-        key = (req.ontology, req.model, version, req.k)
+        if isinstance(req, SimRequest):
+            key = (req.ontology, req.model, version, _SIM_K)
+        else:
+            # validate k at intake: a k < 1 (especially k == _SIM_K) must
+            # never reach the queue key space — it would land top-k
+            # requests in a sim queue and poison its coalesced peers
+            if isinstance(req.k, bool) or not isinstance(req.k, int) \
+                    or req.k < 1:
+                return self._reject_at_submit(
+                    ticket, f"k must be >= 1, got {req.k!r}", "BAD_REQUEST")
+            key = (req.ontology, req.model, version, req.k)
         with self._cond:
             if self._stopping:
                 stopped = True       # reject outside the lock hold below
@@ -609,8 +799,14 @@ class BatchScheduler:
             # after stop() nothing drains the queues: enqueueing would
             # strand the ticket forever, so refuse it (executor-shutdown
             # semantics; start() re-opens intake)
-            return self._reject_at_submit(ticket, "scheduler is stopped")
+            return self._reject_at_submit(ticket, "scheduler is stopped",
+                                          "SHUTTING_DOWN")
         return ticket
+
+    def accepting(self) -> bool:
+        """False once stop() has closed intake (start() re-opens it)."""
+        with self._lock:
+            return not self._stopping
 
     def pending(self) -> int:
         with self._lock:
@@ -627,11 +823,12 @@ class BatchScheduler:
         the dict would be allocated only to be discarded)."""
         results: Dict[int, List[ClosestConcept]] = {}
         errors: Dict[int, str] = {}
-        n_batches = n_padded = n_resolved = 0
+        n_batches = n_padded = n_resolved = n_sim = 0
 
-        def reject(ticket: Ticket, msg: str) -> None:
+        def reject(ticket: Ticket, msg: str, code: Optional[str] = None,
+                   details: Optional[Dict] = None) -> None:
             nonlocal n_resolved
-            if ticket._reject(msg):
+            if ticket._reject(msg, code, details):
                 errors[ticket.id] = msg
                 n_resolved += 1
 
@@ -641,22 +838,63 @@ class BatchScheduler:
             try:
                 index = self.engine._index(ont, model, version)
             except Exception as e:
+                # can't distinguish unknown model from unknown version at
+                # this depth — the gateway classifies both pre-submit
                 for ticket, _ in items:
                     reject(ticket, str(e))
                 continue
             try:
+                if k == _SIM_K:
+                    # pair-similarity queue: one vectorized pairwise-dot
+                    # per chunk instead of a private lookup per request
+                    for start in range(0, len(items), self.max_batch):
+                        chunk = items[start:start + self.max_batch]
+                        live: List[Tuple[Ticket, int, int]] = []
+                        for ticket, req in chunk:
+                            try:
+                                ra = index.resolve(req.a, fuzzy=req.fuzzy)
+                                rb = index.resolve(req.b, fuzzy=req.fuzzy)
+                            except Exception as e:
+                                reject(ticket,
+                                       f"bad query pair ({req.a!r}, {req.b!r})"
+                                       f": {e}", "BAD_REQUEST")
+                                continue
+                            missing = [q for q, r in ((req.a, ra), (req.b, rb))
+                                       if r is None]
+                            if missing:
+                                # report the FULL list of unresolvable names
+                                reject(ticket, "unknown class(es): " +
+                                       ", ".join(repr(m) for m in missing),
+                                       "UNKNOWN_CLASS", {"missing": missing})
+                            else:
+                                live.append((ticket, ra, rb))
+                        if not live:
+                            continue
+                        ua = index.unit[[ra for _, ra, _ in live]]
+                        ub = index.unit[[rb for _, _, rb in live]]
+                        scores = np.einsum("ij,ij->i", ua, ub)
+                        for (ticket, _, _), s in zip(live, scores):
+                            if collect:
+                                results[ticket.id] = float(s)
+                            if ticket._resolve(float(s)):
+                                n_resolved += 1
+                        n_batches += 1
+                        n_sim += 1
+                    continue
                 for start in range(0, len(items), self.max_batch):
                     chunk = items[start:start + self.max_batch]
                     live: List[Tuple[Ticket, int]] = []     # (ticket, row)
                     for ticket, req in chunk:
                         # a malformed query (e.g. None) fails alone too
                         try:
-                            row = index.resolve(req.query)
+                            row = index.resolve(req.query, fuzzy=req.fuzzy)
                         except Exception as e:
-                            reject(ticket, f"bad query {req.query!r}: {e}")
+                            reject(ticket, f"bad query {req.query!r}: {e}",
+                                   "BAD_REQUEST")
                             continue
                         if row is None:
-                            reject(ticket, f"unknown class {req.query!r}")
+                            reject(ticket, f"unknown class {req.query!r}",
+                                   "UNKNOWN_CLASS", {"missing": [req.query]})
                         else:
                             live.append((ticket, row))
                     if not live:
@@ -667,8 +905,10 @@ class BatchScheduler:
                     try:
                         batch_res = index.top_k_rows(rows + [rows[-1]] * pad, k)
                     except Exception as e:
+                        code = "BAD_REQUEST" if isinstance(e, ValueError) \
+                            else None
                         for ticket, _ in live:
-                            reject(ticket, str(e))
+                            reject(ticket, str(e), code)
                         continue
                     for (ticket, _), res in zip(live, batch_res):
                         if collect:
@@ -685,6 +925,7 @@ class BatchScheduler:
         with self._lock:
             self._record_errors(errors)
             self.stats["batches"] += n_batches
+            self.stats["sim_batches"] += n_sim
             self.stats["padded_queries"] += n_padded
             self.stats["resolved"] += n_resolved
         return results

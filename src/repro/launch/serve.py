@@ -1,20 +1,21 @@
-"""Serving launcher — the paper's deployment mode.
+"""Serving launcher — the paper's deployment mode, over the gateway API.
 
-Stands up the Bio-KGvec2go serving engine over a registry (training the
-snapshots first if the registry is empty), then runs a concurrent request
-session against the three endpoints and reports latency: ``--threads``
-client threads submit future-style tickets that the BatchScheduler's
-background flush loop resolves under its deadline policy
-(``--flush-after-ms`` or a full ``--batch``, whichever first). With more
-than one jax device, the embedding table is sharded P("data", None)
-across them and top-k runs through the sharded local+merge kernel path.
+Stands up the Bio-KGvec2go gateway over a registry (training the
+snapshots first if the registry is empty), then runs a concurrent
+request session against the v1 endpoints and reports latency:
+``--threads`` client threads call the typed gateway methods, which
+submit future-style tickets that the BatchScheduler's background flush
+loop resolves under its deadline policy (``--flush-after-ms`` or a full
+``--batch``, whichever first). With more than one jax device, the
+embedding table is sharded P("data", None) across them and top-k runs
+through the sharded local+merge kernel path.
 
     PYTHONPATH=src python -m repro.launch.serve --registry /tmp/biokg \
         --requests 200 --batch 32 --threads 8 --flush-after-ms 2
 
-The Flask/Apache layer of the paper is a thin HTTP shim over exactly these
-calls (see DESIGN.md §8); this driver exercises the same engine the way the
-production WSGI workers would — many independent clients, one scheduler.
+An HTTP layer is a thin shim over exactly ``gateway.handle(route,
+payload)`` — this driver exercises the same dispatch the production
+WSGI workers would: many independent clients, one scheduler.
 """
 from __future__ import annotations
 
@@ -37,13 +38,16 @@ def main():
                     help="concurrent client threads")
     ap.add_argument("--flush-after-ms", type=float, default=2.0,
                     help="flush-loop deadline")
+    ap.add_argument("--page", type=int, default=2000,
+                    help="download page size (cursor pagination)")
     ap.add_argument("--no-shard", action="store_true",
                     help="force the single-device path even on multi-device")
     ap.add_argument("--train-if-missing", action="store_true", default=True)
     args = ap.parse_args()
 
+    from repro.api import Gateway
     from repro.core.registry import EmbeddingRegistry
-    from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
+    from repro.core.serving import ServingEngine
     from .mesh import make_serving_mesh
 
     registry = EmbeddingRegistry(args.registry)
@@ -54,31 +58,56 @@ def main():
 
     mesh = None if args.no_shard else make_serving_mesh()
     engine = ServingEngine(registry, mesh=mesh)
-    ids, labels, emb, meta = registry.get(args.ontology, args.model)
-    print(f"[serve] {args.ontology}/{meta['version']}/{args.model}: "
-          f"{len(ids)} classes, dim={meta['dim']}, "
+    gw = Gateway(engine, max_batch=args.batch,
+                 flush_after_ms=args.flush_after_ms)
+
+    vers = gw.versions(args.ontology)
+    total = gw.download(args.ontology, args.model, version=vers.latest,
+                        limit=1).total
+    print(f"[serve] {args.ontology}/{vers.latest}/{args.model}: "
+          f"{total} classes, versions={vers.versions}, "
           f"{'sharded over ' + str(mesh.devices.size) + ' devices' if mesh else 'single device'}")
 
     rng = np.random.default_rng(0)
 
-    # -- endpoint 1: download ------------------------------------------- #
+    # -- endpoint: download (cursor-paginated); ids collected here so the
+    # table is paged exactly once ---------------------------------------- #
     t0 = time.perf_counter()
-    payload = engine.download(args.ontology, args.model)
-    print(f"[serve] download: {len(payload)/1e6:.2f} MB JSON "
-          f"in {time.perf_counter()-t0:.2f}s")
+    ids, nbytes, pages, offset = [], 0, 0, 0
+    while offset is not None:
+        page = gw.download(args.ontology, args.model, version=vers.latest,
+                           offset=offset, limit=args.page)
+        ids.extend(r[0] for r in page.rows)
+        nbytes += sum(len(r[0]) + 8 * len(r[1]) for r in page.rows)
+        offset = page.next_offset
+        pages += 1
+    print(f"[serve] download: {page.total} classes over {pages} pages "
+          f"(~{nbytes/1e6:.1f} MB) in {time.perf_counter()-t0:.2f}s")
 
-    # -- endpoint 2: similarity ----------------------------------------- #
+    # -- endpoint: sim (batch-first through the scheduler) -------------- #
     lat = []
     for _ in range(args.requests):
         a, b = (ids[i] for i in rng.integers(0, len(ids), 2))
         t0 = time.perf_counter()
-        engine.similarity(args.ontology, args.model, a, b)
+        gw.similarity(args.ontology, args.model, a, b)
         lat.append(time.perf_counter() - t0)
     lat = np.array(lat) * 1e3
     print(f"[serve] similarity: p50={np.percentile(lat,50):.3f}ms "
           f"p99={np.percentile(lat,99):.3f}ms over {args.requests} requests")
 
-    # -- endpoint 3: top-k closest, concurrent clients + flush loop ------ #
+    # -- endpoint: closest-concepts, concurrent clients + flush loop ---- #
+    # warm every power-of-two padding-bucket jit shape first, so the
+    # timed region measures serving, not retraces
+    from repro.api.schema import ClosestConceptsRequest
+    b = 1
+    while b <= args.batch:
+        gw.closest_concepts_batch(
+            [ClosestConceptsRequest(args.ontology, args.model,
+                                    ids[i % len(ids)], args.k)
+             for i in range(b)])
+        b <<= 1
+    warm_stats = dict(gw.scheduler.stats)   # report only the timed region
+
     queries = [ids[int(i)] for i in rng.integers(0, len(ids), args.requests)]
     chunks = [queries[i::args.threads] for i in range(args.threads)]
     lat, lat_lock = [], threading.Lock()
@@ -88,39 +117,44 @@ def main():
         out = []
         for q in mine:
             t1 = time.perf_counter()
-            ticket = sched.submit(TopKRequest(args.ontology, args.model,
-                                              q, args.k))
-            res = ticket.result(timeout=60)
+            resp = gw.closest_concepts(args.ontology, args.model, q, k=args.k)
             out.append(time.perf_counter() - t1)
             if cid == 0 and not sample:
-                sample[0] = res
+                sample[0] = resp
         with lat_lock:
             lat.extend(out)
 
-    with BatchScheduler(engine, max_batch=args.batch,
-                        flush_after_ms=args.flush_after_ms) as sched:
-        t0 = time.perf_counter()
-        workers = [threading.Thread(target=client, args=(i, c))
-                   for i, c in enumerate(chunks)]
-        for w in workers:
-            w.start()
-        for w in workers:
-            w.join()
-        dt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    workers = [threading.Thread(target=client, args=(i, c))
+               for i, c in enumerate(chunks)]
+    for w in workers:
+        w.start()
+    for w in workers:
+        w.join()
+    dt = time.perf_counter() - t0
+    run_stats = {k: gw.scheduler.stats[k] - warm_stats[k] for k in warm_stats}
     lat_ms = np.array(lat) * 1e3
     print(f"[serve] top-{args.k}: {args.requests} requests from "
           f"{args.threads} clients in {dt:.2f}s "
           f"({args.requests/dt:.0f} req/s; "
-          f"{sched.stats['batches']} micro-batches, "
-          f"{sched.stats['full_flushes']} full / "
-          f"{sched.stats['deadline_flushes']} deadline flushes, "
-          f"{sched.stats['padded_queries']} padded) "
+          f"{run_stats['batches']} micro-batches, "
+          f"{run_stats['full_flushes']} full / "
+          f"{run_stats['deadline_flushes']} deadline flushes, "
+          f"{run_stats['padded_queries']} padded) "
           f"p50={np.percentile(lat_ms,50):.2f}ms "
-          f"p99={np.percentile(lat_ms,99):.2f}ms "
-          f"cache={engine.cache_stats()}")
+          f"p99={np.percentile(lat_ms,99):.2f}ms")
+
+    # -- ops endpoints via the wire entry point ------------------------- #
+    health = gw.handle("/health")
+    stats = gw.handle("/stats")
+    print(f"[serve] health={health['status']} "
+          f"cache={stats['cache']} "
+          f"gateway={{requests: {stats['gateway']['requests']}, "
+          f"errors: {stats['gateway']['errors']}}}")
     print("[serve] sample result:")
-    for c in sample[0][:3]:
+    for c in sample[0].results[:3]:
         print(f"    {c.identifier:12s} {c.score:.4f}  {c.label[:40]}  {c.url}")
+    gw.close()
 
 
 if __name__ == "__main__":

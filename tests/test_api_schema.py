@@ -1,0 +1,131 @@
+"""Wire-codec round trips for every gateway request/response type
+(including error payloads), plus the ApiError contract."""
+import json
+
+import pytest
+
+from repro.api import schema
+from repro.api.schema import (ApiError, AutocompleteRequest,
+                              AutocompleteResponse, ClosestConceptsRequest,
+                              ClosestConceptsResponse, ConceptHit,
+                              DownloadPage, DownloadRequest, GetVectorRequest,
+                              HealthRequest, HealthResponse, LineageRequest,
+                              LineageResponse, SimilarityRequest,
+                              SimilarityResponse, StatsRequest, StatsResponse,
+                              VectorResponse, VersionsRequest,
+                              VersionsResponse, from_wire, payload_to,
+                              to_wire)
+
+HIT = ConceptHit("GO:0000002", "some label", 0.91, "https://x/GO:0000002")
+
+EXAMPLES = [
+    GetVectorRequest("go", "transe", "GO:0000001"),
+    GetVectorRequest("go", "transe", "kinase", fuzzy=True, version="2024-01"),
+    SimilarityRequest("go", "transe", "GO:0000001", "GO:0000002"),
+    SimilarityRequest("hp", "rdf2vec", "a", "b", fuzzy=True, version="v3"),
+    ClosestConceptsRequest("go", "transe", "GO:0000001", k=25),
+    DownloadRequest("go", "transe", version="2024-01", offset=100, limit=50),
+    AutocompleteRequest("go", "transe", "posi", limit=5),
+    HealthRequest(),
+    StatsRequest(),
+    VersionsRequest("go"),
+    LineageRequest("go", version="2024-02"),
+    VectorResponse("go", "transe", "2024-01", "GO:0000001", "lbl",
+                   [0.25, -1.5, 3.0]),
+    SimilarityResponse("go", "transe", "2024-01", "a", "b", 0.5),
+    ClosestConceptsResponse("go", "transe", "2024-01", "GO:0000001", 2,
+                            [HIT, ConceptHit("GO:3", "l3", 0.5, "u3")]),
+    DownloadPage("go", "transe", "2024-01", offset=0, limit=2, total=5,
+                 rows=[["GO:1", [0.1, 0.2]], ["GO:2", [0.3, 0.4]]],
+                 next_offset=2),
+    DownloadPage("go", "transe", "2024-01", offset=4, limit=2, total=5,
+                 rows=[["GO:5", [0.5, 0.5]]], next_offset=None),
+    AutocompleteResponse("go", "transe", "2024-01", "posi", ["positive reg"]),
+    HealthResponse("ok", "v1", ["go", "hp"], True),
+    StatsResponse({"submitted": 4}, {"hits": 1}, {"requests": 9}),
+    VersionsResponse("go", ["2024-01", "2024-02"], "2024-02", ["transe"]),
+    LineageResponse("go", "2024-02",
+                    {"transe": {"parent_version": "2024-01",
+                                "mode": "incremental", "delta": {"n": 3}},
+                     "boxe": None}),
+]
+
+
+@pytest.mark.parametrize("obj", EXAMPLES, ids=lambda o: type(o).__name__)
+def test_round_trip_through_json(obj):
+    wire = to_wire(obj)
+    assert isinstance(wire["type"], str)
+    # must survive an actual JSON serialization, not just dict identity
+    back = from_wire(json.loads(json.dumps(wire)))
+    assert back == obj and type(back) is type(obj)
+
+
+def test_error_round_trip():
+    e = ApiError("UNKNOWN_CLASS", "unknown class(es): 'a', 'b'",
+                 details={"missing": ["a", "b"]})
+    wire = json.loads(json.dumps(to_wire(e)))
+    assert wire["type"] == "error" and wire["status"] == 404
+    back = from_wire(wire)
+    assert isinstance(back, ApiError)      # returned, not raised
+    assert back == e
+    assert back.details["missing"] == ["a", "b"]
+
+
+def test_every_code_has_status_and_legacy_mapping():
+    assert set(schema.CODE_STATUS) == {
+        "UNKNOWN_ONTOLOGY", "UNKNOWN_MODEL", "UNKNOWN_VERSION",
+        "UNKNOWN_CLASS", "BAD_REQUEST", "TIMEOUT", "SHUTTING_DOWN",
+        "INTERNAL"}
+    for code in schema.CODE_STATUS:
+        err = ApiError(code, "m")
+        assert err.status == schema.CODE_STATUS[code]
+        assert isinstance(err.legacy(), Exception)
+    assert isinstance(ApiError("UNKNOWN_CLASS", "m").legacy(), KeyError)
+    assert isinstance(ApiError("BAD_REQUEST", "m").legacy(), ValueError)
+    assert isinstance(ApiError("TIMEOUT", "m").legacy(), TimeoutError)
+    assert isinstance(ApiError("SHUTTING_DOWN", "m").legacy(), RuntimeError)
+    with pytest.raises(ValueError):
+        ApiError("NO_SUCH_CODE", "m")
+
+
+def test_from_wire_malformed_payloads():
+    with pytest.raises(ApiError) as ei:
+        from_wire({"no_type": 1})
+    assert ei.value.code == "BAD_REQUEST"
+    with pytest.raises(ApiError):
+        from_wire({"type": "no_such_type"})
+    with pytest.raises(ApiError):
+        from_wire([1, 2, 3])
+    with pytest.raises(ApiError):
+        from_wire({"type": "error", "code": 42})
+    with pytest.raises(ApiError):
+        from_wire({"type": "error", "code": "NOT_A_CODE"})
+    # non-dict details / non-int status are BAD_REQUEST, not TypeError
+    with pytest.raises(ApiError):
+        from_wire({"type": "error", "code": "INTERNAL", "details": 123})
+    with pytest.raises(ApiError):
+        from_wire({"type": "error", "code": "INTERNAL", "status": {}})
+    with pytest.raises(ApiError):
+        from_wire({"type": "error", "code": "INTERNAL", "status": True})
+
+
+def test_payload_to_rejects_unknown_and_missing_fields():
+    with pytest.raises(ApiError) as ei:
+        payload_to(SimilarityRequest,
+                   {"ontology": "go", "model": "m", "a": "x", "b": "y",
+                    "bogus": 1})
+    assert ei.value.details["unknown_fields"] == ["bogus"]
+    with pytest.raises(ApiError) as ei:
+        payload_to(SimilarityRequest, {"ontology": "go", "model": "m"})
+    assert ei.value.details["missing_fields"] == ["a", "b"]
+    # optional fields may be omitted
+    req = payload_to(ClosestConceptsRequest,
+                     {"ontology": "go", "model": "m", "query": "q"})
+    assert req.k == 10 and req.version is None and req.fuzzy is False
+
+
+def test_nested_hits_reconstructed():
+    wire = to_wire(ClosestConceptsResponse("go", "m", "v", "q", 1, [HIT]))
+    back = from_wire(json.loads(json.dumps(wire)))
+    assert isinstance(back.results[0], ConceptHit)
+    assert back.results[0].score == pytest.approx(0.91)

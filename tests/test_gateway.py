@@ -1,0 +1,390 @@
+"""Gateway API v1: batch-first routing, parity with the index-level
+oracle on all five paper endpoints, boundary validation, structured
+errors, download pagination invariants, and the invalidate freshness
+hook. Snapshots are published directly (no training) — fast tier."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import ApiError, Gateway, from_wire
+from repro.core.serving import ServingEngine
+
+N, D = 40, 12
+
+
+def _publish(registry, ontology, version, model="transe", n=N, seed=0,
+             lineage=None):
+    rng = np.random.default_rng(seed)
+    ids = [f"{ontology.upper()}:{i:07d}" for i in range(n)]
+    labels = [f"{ontology} term {i}" for i in range(n)]
+    emb = rng.standard_normal((n, D)).astype(np.float32)
+    registry.publish(ontology, version, model, ids, labels, emb,
+                     ontology_checksum=f"ck-{version}-{seed}",
+                     hyperparameters={"dim": D}, lineage=lineage)
+    return ids
+
+
+@pytest.fixture()
+def gw(registry):
+    ids = _publish(registry, "go", "2024-01", seed=1,
+                   lineage={"parent_version": None, "mode": "full",
+                            "delta": None})
+    _publish(registry, "go", "2024-02", seed=2,
+             lineage={"parent_version": "2024-01", "mode": "incremental",
+                      "delta": {"churn_fraction": 0.1}})
+    engine = ServingEngine(registry, cache_capacity=4)
+    return Gateway(engine), engine, ids
+
+
+# ------------------------- batch-first routing ------------------------- #
+def test_similarity_and_closest_route_through_scheduler(gw):
+    gateway, engine, ids = gw
+    before = dict(gateway.scheduler.stats)
+    gateway.similarity("go", "transe", ids[0], ids[1])
+    gateway.closest_concepts("go", "transe", ids[2], k=5)
+    after = gateway.scheduler.stats
+    # the acceptance criterion: gateway traffic increments the scheduler
+    assert after["submitted"] == before["submitted"] + 2
+    assert after["resolved"] == after["submitted"]
+    assert after["sim_batches"] >= 1
+
+
+def test_engine_delegates_also_route_through_scheduler(gw):
+    gateway, engine, ids = gw
+    # the deprecated ServingEngine methods share the engine's default
+    # gateway — their traffic is batched scheduler traffic too
+    engine.similarity("go", "transe", ids[0], ids[1])
+    engine.closest_concepts("go", "transe", ids[0], k=3)
+    st = engine.gateway().scheduler.stats
+    assert st["submitted"] >= 2 and st["resolved"] == st["submitted"]
+
+
+def test_topk_k_equal_sim_sentinel_cannot_poison_sim_queue(gw):
+    """A direct-API TopKRequest with k == -1 must not land in the
+    (ontology, model, version, _SIM_K) queue and fail its coalesced
+    SimRequest peers: k is validated at intake."""
+    from repro.core.serving import SimRequest, TopKRequest
+    gateway, engine, ids = gw
+    sched = gateway.scheduler
+    good = sched.submit(SimRequest("go", "transe", ids[0], ids[1]))
+    bad = sched.submit(TopKRequest("go", "transe", ids[2], -1))
+    assert "k must be >= 1" in bad.exception(timeout=0)   # rejected at submit
+    sched.flush()
+    assert isinstance(good.result(timeout=0), float)      # peer unharmed
+    assert sched.stats["resolved"] == sched.stats["submitted"]
+
+
+def test_concurrent_sim_calls_coalesce_into_one_batch(gw):
+    gateway, engine, ids = gw
+    from repro.core.serving import SimRequest
+    tickets = [gateway.scheduler.submit(
+        SimRequest("go", "transe", ids[i], ids[i + 1], version="2024-02"))
+        for i in range(8)]
+    gateway.scheduler.flush()
+    assert gateway.scheduler.stats["sim_batches"] == 1     # one kernel call
+    for i, t in enumerate(tickets):
+        oracle = float(np.dot(
+            engine._index("go", "transe", "2024-02").unit[i],
+            engine._index("go", "transe", "2024-02").unit[i + 1]))
+        assert t.result(timeout=0) == pytest.approx(oracle, abs=1e-6)
+
+
+# ------------------------- endpoint parity ----------------------------- #
+def test_five_endpoints_parity_with_index_oracle(gw):
+    gateway, engine, ids = gw
+    idx = engine._index("go", "transe", "2024-02")
+
+    vec = gateway.get_vector("go", "transe", ids[3])
+    assert vec.version == "2024-02" and vec.identifier == ids[3]
+    assert np.allclose(vec.vector, idx.embeddings[3])
+
+    sim = gateway.similarity("go", "transe", ids[0], ids[1])
+    assert sim.score == pytest.approx(
+        float(np.dot(idx.unit[0], idx.unit[1])), abs=1e-6)
+
+    top = gateway.closest_concepts("go", "transe", ids[3], k=5)
+    oracle = idx.top_k([ids[3]], 5)[0]
+    assert [h.identifier for h in top.results] == \
+           [c.identifier for c in oracle]
+    assert [h.score for h in top.results] == pytest.approx(
+        [c.score for c in oracle])
+
+    page = gateway.download("go", "transe", limit=N)
+    assert json.dumps({i: v for i, v in page.rows}) == \
+           engine.registry.to_json("go", "transe", "2024-02")
+
+    ac = gateway.autocomplete("go", "transe", "go term 1", limit=4)
+    assert ac.completions == idx.autocomplete("go term 1", 4)
+
+
+def test_handle_wire_parity_with_typed_methods(gw):
+    gateway, engine, ids = gw
+    wire = gateway.handle("/sim/go/transe", {"a": ids[0], "b": ids[1]})
+    typed = gateway.similarity("go", "transe", ids[0], ids[1])
+    assert from_wire(wire) == typed
+    wire = gateway.handle("closest-concepts/go/transe",   # no leading slash
+                          {"query": ids[0], "k": 3})
+    assert from_wire(wire) == gateway.closest_concepts(
+        "go", "transe", ids[0], k=3)
+
+
+# ---------------------- validation at the boundary --------------------- #
+@pytest.mark.parametrize("route,payload", [
+    ("/closest-concepts/go/transe", {"query": "GO:0000001", "k": 0}),
+    ("/closest-concepts/go/transe", {"query": "GO:0000001", "k": -3}),
+    ("/closest-concepts/go/transe", {"query": "GO:0000001", "k": True}),
+    ("/closest-concepts/go/transe", {"query": "GO:0000001", "k": "5"}),
+    ("/closest-concepts/go/transe", {"query": ""}),
+    ("/closest-concepts/go/transe", {"query": "   "}),
+    ("/closest-concepts/go/transe", {"query": None}),
+    ("/sim/go/transe", {"a": "", "b": "GO:0000001"}),
+    ("/download/go/transe", {"limit": 0}),
+    ("/download/go/transe", {"offset": -1}),
+    ("/autocomplete/go/transe", {"prefix": ""}),
+    ("/autocomplete/go/transe", {"prefix": "x", "limit": -1}),
+    ("/sim/go/transe", {"a": "x", "b": "y", "bogus_field": 1}),
+    ("/sim/go/transe", {"a": "x"}),                      # missing b
+])
+def test_bad_requests_rejected_at_boundary(gw, route, payload):
+    gateway, _, _ = gw
+    before = dict(gateway.scheduler.stats)
+    out = gateway.handle(route, payload)
+    assert out["type"] == "error" and out["code"] == "BAD_REQUEST"
+    # nothing reached the kernel path
+    assert gateway.scheduler.stats["submitted"] == before["submitted"]
+
+
+def test_unknown_route_is_404_style(gw):
+    gateway, _, _ = gw
+    for route in ("/no/such/route", "/sim/only-onto", "", "/sim"):
+        out = gateway.handle(route)
+        assert out["code"] == "BAD_REQUEST" and out["status"] == 404
+
+
+def test_unknown_coordinates_have_stable_codes(gw):
+    gateway, _, ids = gw
+    cases = [
+        ("/sim/mars/transe", {"a": ids[0], "b": ids[1]}, "UNKNOWN_ONTOLOGY"),
+        ("/sim/go/no-model", {"a": ids[0], "b": ids[1]}, "UNKNOWN_MODEL"),
+        ("/sim/go/transe", {"a": ids[0], "b": ids[1], "version": "1999-01"},
+         "UNKNOWN_VERSION"),
+        ("/sim/go/transe", {"a": "NOPE", "b": ids[1]}, "UNKNOWN_CLASS"),
+        ("/get-vector/go/transe", {"query": "NOPE"}, "UNKNOWN_CLASS"),
+        ("/closest-concepts/go/transe", {"query": "NOPE"}, "UNKNOWN_CLASS"),
+        ("/versions/venus", {}, "UNKNOWN_ONTOLOGY"),
+        ("/lineage/go", {"version": "1999-01"}, "UNKNOWN_VERSION"),
+    ]
+    for route, payload, code in cases:
+        out = gateway.handle(route, payload)
+        assert (out["type"], out["code"]) == ("error", code), route
+        assert out["status"] == 404
+
+
+def test_similarity_reports_every_missing_class(gw):
+    """The PR 4 satellite bugfix: BOTH unresolvable names are reported,
+    fuzzy or not, and the gateway error carries the full list."""
+    gateway, engine, ids = gw
+    with pytest.raises(ApiError) as ei:
+        gateway.similarity("go", "transe", "BOGUS-A", "BOGUS-B")
+    assert ei.value.code == "UNKNOWN_CLASS"
+    assert ei.value.details["missing"] == ["BOGUS-A", "BOGUS-B"]
+    with pytest.raises(ApiError) as ei:
+        gateway.similarity("go", "transe", "BOGUS-A", ids[0], fuzzy=True)
+    assert ei.value.details["missing"] == ["BOGUS-A"]
+    # the deprecated engine delegate keeps KeyError — with both names
+    with pytest.raises(KeyError) as ke:
+        engine.similarity("go", "transe", "BOGUS-A", "BOGUS-B", fuzzy=True)
+    assert "BOGUS-A" in str(ke.value) and "BOGUS-B" in str(ke.value)
+
+
+# ------------------------ download pagination -------------------------- #
+def test_download_pages_are_a_disjoint_cover(gw):
+    gateway, engine, ids = gw
+    seen, offset, pages = [], 0, 0
+    while offset is not None:
+        page = gateway.download("go", "transe", offset=offset, limit=7)
+        assert page.total == N and page.version == "2024-02"
+        assert page.offset == offset
+        seen.extend(r[0] for r in page.rows)
+        offset = page.next_offset
+        pages += 1
+    assert pages == (N + 6) // 7
+    assert seen == ids                      # full cover, order, no overlap
+    # an offset past the end is an empty page, not an error
+    tail = gateway.download("go", "transe", offset=N + 5, limit=7)
+    assert tail.rows == [] and tail.next_offset is None
+
+
+def test_download_cursor_stable_under_pinning_across_invalidate(
+        gw, registry):
+    gateway, engine, ids = gw
+    first = gateway.download("go", "transe", limit=10)
+    assert first.version == "2024-02"
+    # a release lands mid-pagination
+    _publish(registry, "go", "2024-03", seed=9)
+    engine.invalidate("go", "2024-03")
+    # echoing page.version back keeps the cursor on the pinned release
+    second = gateway.download("go", "transe", version=first.version,
+                              offset=first.next_offset, limit=10)
+    assert second.version == "2024-02"
+    repeat = gateway.download("go", "transe", version="2024-02",
+                              offset=0, limit=10)
+    assert repeat.rows == first.rows        # stable within the pin
+    # an unpinned fresh download sees the new latest
+    assert gateway.download("go", "transe", limit=5).version == "2024-03"
+
+
+# ----------------------- ops endpoints + hook -------------------------- #
+def test_versions_and_lineage_reflect_publish_after_invalidate(
+        gw, registry):
+    gateway, engine, ids = gw
+    v = gateway.versions("go")
+    assert v.versions == ["2024-01", "2024-02"] and v.latest == "2024-02"
+    assert v.models == ["transe"]
+    lin = gateway.lineage("go")
+    assert lin.version == "2024-02"
+    assert lin.lineage["transe"]["mode"] == "incremental"
+    inv_before = gateway.counters["invalidations"]
+
+    _publish(registry, "go", "2024-03", seed=9,
+             lineage={"parent_version": "2024-02", "mode": "full",
+                      "delta": None})
+    engine.invalidate("go", "2024-03")      # the updater's publish hook
+    assert gateway.counters["invalidations"] == inv_before + 1
+    v = gateway.versions("go")
+    assert v.latest == "2024-03" and "2024-03" in v.versions
+    assert gateway.lineage("go").lineage["transe"]["mode"] == "full"
+
+
+def test_health_and_stats_shapes(gw):
+    gateway, engine, ids = gw
+    h = gateway.health()
+    assert h.status == "ok" and h.api_version == "v1"
+    assert "go" in h.ontologies and h.scheduler_running is False
+    gateway.similarity("go", "transe", ids[0], ids[1])
+    s = gateway.stats()
+    assert s.scheduler["submitted"] >= 1 and s.scheduler["pending"] == 0
+    assert s.gateway["requests"] >= 3
+    assert s.gateway["by_route"]["sim"] >= 1
+    assert s.cache["size"] >= 1
+    bad = gateway.handle("/sim/go/transe", {"a": "NOPE", "b": "NOPE2"})
+    assert bad["code"] == "UNKNOWN_CLASS"
+    s = gateway.stats()
+    assert s.gateway["errors"] >= 1
+    assert s.gateway["by_code"]["UNKNOWN_CLASS"] >= 1
+
+
+def test_bogus_ontology_probes_do_not_grow_meta_cache(gw, registry):
+    gateway, engine, ids = gw
+    for i in range(50):
+        out = gateway.handle(f"/versions/bogus-{i}")
+        assert out["code"] == "UNKNOWN_ONTOLOGY"
+    assert len(gateway._meta_cache) <= 4       # empty results never cached
+    # an ontology published WITHOUT an invalidate (e.g. straight through
+    # registry.publish) is therefore visible on the next probe
+    assert gateway.handle("/versions/late")["code"] == "UNKNOWN_ONTOLOGY"
+    _publish(registry, "late", "v1", seed=3)
+    assert gateway.versions("late").latest == "v1"
+
+
+def test_batch_accepts_one_shot_iterables(gw):
+    from repro.api.schema import ClosestConceptsRequest
+    gateway, _, ids = gw
+    out = gateway.closest_concepts_batch(
+        ClosestConceptsRequest("go", "transe", q, k=3) for q in ids[:5])
+    assert len(out) == 5 and all(len(r.results) == 3 for r in out)
+
+
+def test_handle_rejects_route_vs_payload_conflicts(gw):
+    gateway, _, ids = gw
+    out = gateway.handle("/sim/go/transe",
+                         {"ontology": "hp", "a": ids[0], "b": ids[1]})
+    assert out["code"] == "BAD_REQUEST"
+    assert out["details"]["conflicting_fields"] == ["ontology"]
+    # a redundant-but-agreeing field is fine
+    out = gateway.handle("/sim/go/transe",
+                         {"ontology": "go", "a": ids[0], "b": ids[1]})
+    assert out["type"] == "similarity_response"
+
+
+def test_batch_submit_failure_does_not_strand_staged_tickets(gw):
+    """Sync-flush mode: a validation failure mid-burst must still flush
+    the tickets staged before it — nothing else would drain them."""
+    from repro.api.schema import ClosestConceptsRequest
+    gateway, _, ids = gw
+    with pytest.raises(ApiError):
+        gateway.closest_concepts_batch(
+            [ClosestConceptsRequest("go", "transe", ids[0], k=3),
+             ClosestConceptsRequest("go", "transe", ids[1], k=0)])
+    assert gateway.scheduler.pending() == 0
+    st = gateway.scheduler.stats
+    assert st["resolved"] == st["submitted"]
+
+
+def test_close_unregisters_invalidate_listener(gw, registry):
+    gateway, engine, ids = gw
+    gateway.close()
+    inv = gateway.counters["invalidations"]
+    _publish(registry, "go", "2024-09", seed=5)
+    engine.invalidate("go", "2024-09")
+    assert gateway.counters["invalidations"] == inv    # dead gateway quiet
+    assert engine._invalidate_listeners == []
+
+
+def test_closed_gateway_fails_shutting_down(gw):
+    gateway, engine, ids = gw
+    gateway.close()
+    out = gateway.handle("/sim/go/transe", {"a": ids[0], "b": ids[1]})
+    assert out["code"] == "SHUTTING_DOWN" and out["status"] == 503
+    assert gateway.health().status == "shutting_down"
+    # scheduler-level shutdown rejections carry the same code
+    from repro.core.serving import TopKRequest
+    t = gateway.scheduler.submit(TopKRequest("go", "transe", ids[0], 3))
+    assert t.exception(timeout=0) is not None
+    with pytest.raises(ApiError) as ei:
+        gateway._await_ticket(t)
+    assert ei.value.code == "SHUTTING_DOWN"
+
+
+def test_closest_concepts_batch_is_one_wave(gw):
+    """The burst API: a page of requests submits as one wave (coalescing
+    into few kernel calls) and failed items surface per-slot with
+    return_exceptions."""
+    from repro.api.schema import ClosestConceptsRequest
+    gateway, engine, ids = gw
+    reqs = [ClosestConceptsRequest("go", "transe", ids[i], k=3)
+            for i in range(12)]
+    before = gateway.scheduler.stats["batches"]
+    out = gateway.closest_concepts_batch(reqs)
+    assert gateway.scheduler.stats["batches"] == before + 1   # one wave
+    for i, resp in enumerate(out):
+        oracle = gateway.closest_concepts("go", "transe", ids[i], k=3)
+        assert [h.identifier for h in resp.results] == \
+               [h.identifier for h in oracle.results]
+    mixed = gateway.closest_concepts_batch(
+        [ClosestConceptsRequest("go", "transe", ids[0], k=3),
+         ClosestConceptsRequest("go", "transe", "NOPE", k=3),
+         ClosestConceptsRequest("go", "transe", ids[1], k=0)],
+        return_exceptions=True)
+    assert len(mixed[0].results) == 3
+    assert isinstance(mixed[1], ApiError) and mixed[1].code == "UNKNOWN_CLASS"
+    assert isinstance(mixed[2], ApiError) and mixed[2].code == "BAD_REQUEST"
+    with pytest.raises(ApiError):
+        gateway.closest_concepts_batch(
+            [ClosestConceptsRequest("go", "transe", "NOPE", k=3)])
+
+
+def test_fuzzy_routes_through_scheduler(gw):
+    gateway, engine, ids = gw
+    idx = engine._index("go", "transe", "2024-02")
+    typo = idx.labels[5][:-1] + "x"     # synthetic labels are 1 edit apart,
+    row = idx.resolve(typo, fuzzy=True)  # so pin the ambiguity-free oracle
+    assert row is not None
+    before = gateway.scheduler.stats["submitted"]
+    fuzzy = gateway.similarity("go", "transe", typo, ids[6], fuzzy=True)
+    exact = gateway.similarity("go", "transe", idx.entity_ids[row], ids[6])
+    assert exact.score == fuzzy.score
+    top = gateway.closest_concepts("go", "transe", typo, k=3, fuzzy=True)
+    assert len(top.results) == 3
+    assert gateway.scheduler.stats["submitted"] == before + 3
