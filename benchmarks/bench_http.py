@@ -1,0 +1,319 @@
+"""HTTP layer benchmark: the stdlib service front end vs the in-process
+gateway under 16 concurrent clients, plus the conditional-GET fast path.
+
+Three measurements over the same top-k workload:
+
+  * gateway-inproc  — 16 threads call ``gw.closest_concepts`` directly
+    (PR 4's batched mode: tickets + the background flush loop). This is
+    the ceiling: no sockets, no JSON re-parse.
+  * http            — the same 16 clients, each holding ONE persistent
+    keep-alive ``http.client.HTTPConnection`` to a
+    ``ThreadingHTTPServer`` over the *same* gateway, so the scheduler
+    coalesces across sockets exactly as it does across threads. The
+    clients run in a SEPARATE process: real clients do not share the
+    server's GIL, and billing the server for client-side response
+    parsing in the same interpreter would understate it ~2x.
+  * etag-304        — single client re-fetching a pinned download page
+    with ``If-None-Match``: the 304 path (no gateway, no index) vs the
+    full 200 page fetch, q/s each.
+
+Emits ``benchmarks/results/BENCH_http.json``.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_http [--fast]
+
+Acceptance floor (PR 5): HTTP >= 0.5x the in-process gateway q/s at 16
+clients at full size — the transport tax (socket + HTTP parse + JSON
+codec) must stay under half the throughput, which it only does if
+keep-alive and cross-socket coalescing actually work. At --fast CI size
+the floor is 0.2x: with a 2k-class table the kernel work per request is
+so small that the constant per-request transport cost dominates both
+sides of the ratio (and the 2-core CI box runs client and server
+processes on the same silicon), so the CI floor only catches
+"keep-alive or coalescing stopped working" regressions; measured
+full-size numbers are the recorded trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import http.client
+import json
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+RESULTS = REPO / "benchmarks" / "results"
+FLOOR = 0.5          # http q/s vs in-process gateway q/s, 16 clients
+CI_FLOOR = 0.2       # --fast: transport tax dominates at tiny kernel size
+
+#: the out-of-process client fleet: argv = port clients per_client n k,
+#: stdout = one JSON line {"wall": s, "lat": [s, ...]}
+_CLIENT_DRIVER = r"""
+import http.client, json, random, sys, threading, time
+port, clients, per, n, k = (int(a) for a in sys.argv[1:6])
+ids = [f"GO:{i:07d}" for i in range(n)]
+lat, errors, lock = [], [], threading.Lock()
+barrier = threading.Barrier(clients + 1)
+
+def worker(cix):
+    r = random.Random(100 + cix)
+    mine = []
+    try:
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+        barrier.wait()
+        for _ in range(per):
+            q = ids[r.randrange(n)]
+            t0 = time.perf_counter()
+            conn.request("GET",
+                         f"/closest-concepts/go/transe?query={q}&k={k}")
+            resp = conn.getresponse()
+            body = resp.read()
+            mine.append(time.perf_counter() - t0)
+            assert resp.status == 200, body[:200]
+        conn.close()
+    except Exception as e:
+        # a dead client must fail the whole measurement, not quietly
+        # inflate q/s by shortening the wall clock
+        with lock:
+            errors.append(f"client {cix}: {e!r}")
+    with lock:
+        lat.extend(mine)
+
+threads = [threading.Thread(target=worker, args=(i,)) for i in range(clients)]
+for t in threads:
+    t.start()
+barrier.wait()
+t0 = time.perf_counter()
+for t in threads:
+    t.join()
+if errors or len(lat) != clients * per:
+    print("\n".join(errors) or f"only {len(lat)} requests completed",
+          file=sys.stderr)
+    sys.exit(1)
+print(json.dumps({"wall": time.perf_counter() - t0, "lat": lat}))
+"""
+
+
+def _percentiles(lat_s):
+    lat_ms = np.asarray(lat_s) * 1e3
+    return (round(float(np.percentile(lat_ms, 50)), 3),
+            round(float(np.percentile(lat_ms, 99)), 3))
+
+
+def run(fast: bool = False, clients: int = 16, max_batch: int = 64,
+        flush_after_ms: float = 2.0,
+        total_requests: int | None = None) -> dict:
+    from repro.api import Gateway, serve_http
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import BatchScheduler, ServingEngine, TopKRequest
+
+    n = 2_000 if fast else 20_000          # paper: GO > 40k classes
+    d, k = 200, 10
+    total = total_requests or (512 if fast else 2_048)
+    per_client = total // clients
+    total = per_client * clients
+    rng = np.random.default_rng(0)
+
+    with tempfile.TemporaryDirectory() as td:
+        registry = EmbeddingRegistry(td)
+        ids = [f"GO:{i:07d}" for i in range(n)]
+        labels = [f"synthetic term {i}" for i in range(n)]
+        emb = rng.standard_normal((n, d)).astype(np.float32)
+        registry.publish("go", "2025-01", "transe", ids, labels, emb,
+                         ontology_checksum="bench", hyperparameters={"dim": d})
+        engine = ServingEngine(registry)
+
+        # jit-warm every power-of-two bucket shape either mode can hit
+        warm = BatchScheduler(engine, max_batch=max_batch)
+        b = 1
+        while b <= max_batch:
+            for _ in range(b):
+                warm.submit(TopKRequest("go", "transe",
+                                        ids[int(rng.integers(n))], k))
+            warm.flush()
+            b <<= 1
+
+        gw = Gateway(engine, max_batch=max_batch,
+                     flush_after_ms=flush_after_ms)
+        out = {"n_classes": n, "dim": d, "k": k, "clients": clients,
+               "max_batch": max_batch, "flush_after_ms": flush_after_ms,
+               "total_requests": total, "modes": []}
+
+        def fanout(worker):
+            lat, failures, lock = [], [], threading.Lock()
+            barrier = threading.Barrier(clients + 1)
+
+            def client(cix):
+                r = np.random.default_rng(100 + cix)
+                barrier.wait()
+                try:
+                    mine = worker(cix, r)
+                except Exception as e:
+                    with lock:
+                        failures.append(f"client {cix}: {e!r}")
+                    return
+                with lock:
+                    lat.extend(mine)
+
+            threads = [threading.Thread(target=client, args=(i,))
+                       for i in range(clients)]
+            for t in threads:
+                t.start()
+            barrier.wait()
+            t0 = time.perf_counter()
+            for t in threads:
+                t.join()
+            wall = time.perf_counter() - t0
+            # a dead client shortens the wall clock — failing loudly is
+            # the only way the q/s ratio stays meaningful
+            assert not failures, failures
+            assert len(lat) == total, f"only {len(lat)}/{total} completed"
+            return wall, lat
+
+        # ---- mode 1: in-process batched gateway (the ceiling) --------- #
+        def inproc_worker(cix, r):
+            mine = []
+            for _ in range(per_client):
+                q = ids[int(r.integers(n))]
+                t1 = time.perf_counter()
+                gw.closest_concepts("go", "transe", q, k=k)
+                mine.append(time.perf_counter() - t1)
+            return mine
+
+        # best-of-2 (run.py's _time does the same): one bad descheduling
+        # on a small CI box otherwise dominates the ratio
+        wall, lat = min((fanout(inproc_worker) for _ in range(2)),
+                        key=lambda x: x[0])
+        inproc_qps = round(total / wall, 1)
+        p50, p99 = _percentiles(lat)
+        out["modes"].append({"mode": "gateway-inproc", "clients": clients,
+                             "qps": inproc_qps, "p50_ms": p50, "p99_ms": p99,
+                             "wall_s": round(wall, 3)})
+        print(f"  http[inproc ] {clients:2d} clients x {per_client} calls: "
+              f"{inproc_qps:>9,.0f} q/s  p50={p50:.3f}ms p99={p99:.3f}ms")
+
+        # ---- mode 2: the same clients over real sockets --------------- #
+        server = serve_http(gw, port=0)
+        port = server.port
+
+        def http_fleet():
+            out = subprocess.run(
+                [sys.executable, "-c", _CLIENT_DRIVER, str(port),
+                 str(clients), str(per_client), str(n), str(k)],
+                capture_output=True, text=True, timeout=600)
+            assert out.returncode == 0, out.stderr[-2000:]
+            rep = json.loads(out.stdout)
+            return rep["wall"], rep["lat"]
+
+        wall, lat = min((http_fleet() for _ in range(2)),
+                        key=lambda x: x[0])
+        http_qps = round(total / wall, 1)
+        p50, p99 = _percentiles(lat)
+        row = {"mode": "http", "clients": clients, "qps": http_qps,
+               "p50_ms": p50, "p99_ms": p99, "wall_s": round(wall, 3),
+               "vs_inproc": round(http_qps / inproc_qps, 2)}
+        out["modes"].append(row)
+        print(f"  http[socket ] {clients:2d} clients x {per_client} calls: "
+              f"{http_qps:>9,.0f} q/s ({row['vs_inproc']:.2f}x in-process)  "
+              f"p50={p50:.3f}ms p99={p99:.3f}ms")
+
+        # ---- mode 3: conditional GET fast path (informational) -------- #
+        n_cond = min(total, 256)
+        conn = http.client.HTTPConnection("127.0.0.1", port, timeout=60)
+        try:
+            path = "/download/go/transe?version=2025-01&offset=0&limit=100"
+            conn.request("GET", path)
+            resp = conn.getresponse()
+            etag = resp.getheader("ETag")
+            resp.read()
+
+            t0 = time.perf_counter()
+            for _ in range(n_cond):
+                conn.request("GET", path)
+                resp = conn.getresponse()
+                resp.read()
+                assert resp.status == 200
+            full_qps = round(n_cond / (time.perf_counter() - t0), 1)
+
+            t0 = time.perf_counter()
+            for _ in range(n_cond):
+                conn.request("GET", path, headers={"If-None-Match": etag})
+                resp = conn.getresponse()
+                resp.read()
+                assert resp.status == 304
+            cond_qps = round(n_cond / (time.perf_counter() - t0), 1)
+        finally:
+            conn.close()
+        out["modes"].append({"mode": "etag-304", "clients": 1,
+                             "full_page_qps": full_qps,
+                             "not_modified_qps": cond_qps,
+                             "speedup": round(cond_qps / full_qps, 2)})
+        print(f"  http[etag   ] 304 fast path: {cond_qps:>9,.0f} q/s vs "
+              f"{full_qps:,.0f} q/s full pages "
+              f"({cond_qps / full_qps:.1f}x)")
+
+        server.close()
+        gw.close()
+        assert gw.scheduler.stats["resolved"] == gw.scheduler.stats["submitted"]
+
+        out["http_vs_inproc"] = round(http_qps / inproc_qps, 2)
+        out["floor"] = CI_FLOOR if fast else FLOOR
+        out["pass"] = bool(out["http_vs_inproc"] >= out["floor"])
+        return out
+
+
+def floor_speedup(report: dict) -> float:
+    """The floor metric: HTTP q/s over in-process gateway q/s at the
+    benchmark's client count."""
+    return report.get("http_vs_inproc", 0.0)
+
+
+def section_key(fast: bool) -> str:
+    """Fast (CI-sized) runs record under their own key so they never
+    overwrite a full-sized trajectory with smaller-n numbers."""
+    return "http_fast" if fast else "http"
+
+
+def write_results(report: dict) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_http.json"
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            merged = {}
+    merged.update(report)
+    out.write_text(json.dumps(merged, indent=2))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized table (2k classes instead of 20k)")
+    ap.add_argument("--clients", type=int, default=16)
+    args = ap.parse_args()
+
+    rep = run(fast=args.fast, clients=args.clients)
+    out = write_results({section_key(args.fast): rep})
+    print(f"[bench_http] wrote {out}")
+
+    status = "PASS" if rep["pass"] else "FAIL"
+    print(f"[bench_http] {status}: HTTP = {floor_speedup(rep):.2f}x the "
+          f"in-process gateway at {rep['clients']} clients "
+          f"(floor {rep['floor']}x)")
+    if not rep["pass"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

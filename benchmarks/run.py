@@ -31,6 +31,11 @@ corresponds to a system capability it claims:
                       front end vs threaded tickets (floor: 0.9x)
                       (benchmarks/bench_gateway.py), written to
                       results/BENCH_gateway.json
+  B9 http             the stdlib HTTP service layer vs the in-process
+                      gateway at 16 keep-alive clients (floor: 0.5x),
+                      plus the ETag/304 conditional-GET fast path
+                      (benchmarks/bench_http.py), written to
+                      results/BENCH_http.json
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run                # full benchmarks
@@ -287,7 +292,7 @@ def main():
                          "(fast test tier + one scheduler bench bucket)")
     ap.add_argument("--only", default=None,
                     choices=["kge", "serving", "update", "walks", "sched",
-                             "concurrent", "gateway"])
+                             "concurrent", "gateway", "http"])
     args = ap.parse_args()
 
     if args.fast and args.only is None:
@@ -338,6 +343,13 @@ def main():
             bench_gateway.write_results(
                 {bench_gateway.section_key(args.fast): gwy})
             report["gateway"] = gwy
+        if args.only in (None, "http"):
+            print("[B9] HTTP service layer throughput (socket vs in-process)")
+            from benchmarks import bench_http
+            htt = bench_http.run(fast=args.fast)
+            bench_http.write_results(
+                {bench_http.section_key(args.fast): htt})
+            report["http"] = htt
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

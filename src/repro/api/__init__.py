@@ -33,14 +33,20 @@ lineage    ``/lineage/{ontology}``     ``LineageRequest`` -> ``LineageResponse``
 
 Failures are structured: :class:`ApiError` with a stable code
 (``UNKNOWN_ONTOLOGY``, ``UNKNOWN_MODEL``, ``UNKNOWN_VERSION``,
-``UNKNOWN_CLASS``, ``BAD_REQUEST``, ``TIMEOUT``, ``SHUTTING_DOWN``,
-``INTERNAL``), an HTTP-ish status, and machine-readable ``details``
-(e.g. the *full* list of unresolvable class names). ``to_wire`` /
-``from_wire`` round-trip every request, response and error through
-plain JSON-able dicts.
+``UNKNOWN_CLASS``, ``NOT_FOUND`` (unknown route), ``BAD_REQUEST``,
+``TIMEOUT``, ``SHUTTING_DOWN``, ``INTERNAL``), an HTTP status, and
+machine-readable ``details`` (e.g. the *full* list of unresolvable
+class names). ``to_wire`` / ``from_wire`` round-trip every request,
+response and error through plain JSON-able dicts.
+
+The HTTP front end (:mod:`repro.api.http` — ``serve_http``) serves
+exactly these routes over a real socket: GET query strings or POST
+JSON bodies in, the same wire dicts out, ``ApiError.status`` as the
+response status, ETag/304 and chunked streaming on ``download``.
 """
 from .aio import AsyncGateway, ticket_future
-from .gateway import API_VERSION, Gateway
+from .gateway import API_VERSION, Gateway, download_etag
+from .http import GatewayHTTPServer, serve_http
 from .schema import (CODE_STATUS, ApiError, AutocompleteRequest,
                      AutocompleteResponse, ClosestConceptsRequest,
                      ClosestConceptsResponse, ConceptHit, DownloadPage,
@@ -52,6 +58,7 @@ from .schema import (CODE_STATUS, ApiError, AutocompleteRequest,
 
 __all__ = [
     "API_VERSION", "AsyncGateway", "Gateway", "ticket_future",
+    "GatewayHTTPServer", "serve_http", "download_etag",
     "CODE_STATUS", "ApiError", "from_wire", "payload_to", "to_wire",
     "GetVectorRequest", "VectorResponse",
     "SimilarityRequest", "SimilarityResponse",

@@ -2,7 +2,8 @@
 over the serving runtime.
 
 ``Gateway`` is the transport-agnostic public surface of Bio-KGvec2go
-(an HTTP shim is a ~20-line loop over ``handle``). Design points:
+(the real HTTP front end over it lives in ``repro.api.http``). Design
+points:
 
 * **batch-first routing** — every similarity-shaped read (``sim`` AND
   single-query ``closest-concepts``) is submitted to the
@@ -26,10 +27,13 @@ over the serving runtime.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
+import time
 from collections import Counter
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..core.metrics import LatencyHistogram
 from ..core.serving import (BatchScheduler, SchedulerError, ServingEngine,
                             SimRequest, Ticket, TopKRequest)
 from .schema import (ApiError, AutocompleteRequest, AutocompleteResponse,
@@ -47,6 +51,26 @@ API_VERSION = "v1"
 #: front end must provide a future-bridged implementation for each of
 #: these (AsyncGateway asserts coverage at construction)
 TICKET_ROUTES = ("sim", "closest-concepts")
+
+
+def download_etag(ontology: str, model: str, version: str,
+                  offset: int, limit: int,
+                  requested_limit: Optional[int] = None) -> str:
+    """Strong ETag for one download page. A pinned
+    (ontology, model, version) snapshot is immutable, so the page's
+    coordinates fully determine its bytes — hashing them (plus the API
+    version, so a wire-format change invalidates cached pages) gives a
+    validator the HTTP layer can check *without* building or touching
+    the index. ``limit`` is the effective (clamped) page size;
+    ``requested_limit`` (default: same) is what the client asked for —
+    it is part of the key because the page *echoes* it, and a strong
+    validator must identify bytes, not just rows (two clamped requests
+    with different requested limits serve different bodies)."""
+    if requested_limit is None:
+        requested_limit = limit
+    key = (f"{API_VERSION}|{ontology}|{model}|{version}|{offset}"
+           f"|{limit}|{requested_limit}")
+    return '"' + hashlib.sha1(key.encode("utf-8")).hexdigest()[:24] + '"'
 
 
 # ------------------------- boundary validation ------------------------- #
@@ -107,6 +131,8 @@ class Gateway:
         self.counters: Dict[str, Any] = {
             "requests": 0, "errors": 0, "invalidations": 0,
             "by_route": Counter(), "by_code": Counter()}
+        #: route name -> wall-time histogram over every _run (ok + error)
+        self.latency: Dict[str, LatencyHistogram] = {}
         engine.add_invalidate_listener(self._on_invalidate)
         self._routes = (
             ("get-vector", ("get-vector", "{ontology}", "{model}"),
@@ -303,21 +329,28 @@ class Gateway:
     def _handle_download(self, req: DownloadRequest) -> DownloadPage:
         self._check_open()
         offset = _req_int("offset", req.offset, minimum=0)
-        limit = min(_req_int("limit", req.limit, minimum=1),
-                    self.page_limit_max)
+        requested = _req_int("limit", req.limit, minimum=1)
+        # clamp to the server's page cap, but ECHO both limits: a client
+        # paging with limit=20_000 must see the shrink, not infer it
+        limit = min(requested, self.page_limit_max)
         version = self._resolve_coords(req.ontology, req.model,
                                        _opt_version(req.version))
         index = self.engine._index(req.ontology, req.model, version)
         total = len(index.entity_ids)
         ids = index.entity_ids[offset:offset + limit]
         vecs = index.embeddings[offset:offset + limit]
-        rows = [[ident, [round(float(x), 6) for x in vec]]
+        # full registry precision: the same class must serialize to the
+        # same bytes here and on get-vector (wire-fidelity contract)
+        rows = [[ident, [float(x) for x in vec]]
                 for ident, vec in zip(ids, vecs)]
         end = offset + len(rows)
         return DownloadPage(
             ontology=req.ontology, model=req.model, version=version,
             offset=offset, limit=limit, total=total, rows=rows,
-            next_offset=end if end < total else None)
+            next_offset=end if end < total else None,
+            requested_limit=requested,
+            etag=download_etag(req.ontology, req.model, version,
+                               offset, limit, requested))
 
     def _handle_autocomplete(self,
                              req: AutocompleteRequest) -> AutocompleteResponse:
@@ -344,14 +377,19 @@ class Gateway:
         with self.scheduler._lock:
             sched = dict(self.scheduler.stats)
         sched["pending"] = self.scheduler.pending()
+        #: submit->resolve latency over every ticket (scheduler-side)
+        sched["latency_ms"] = self.scheduler.latency.snapshot()
         with self._meta_lock:
             gw = {"requests": self.counters["requests"],
                   "errors": self.counters["errors"],
                   "invalidations": self.counters["invalidations"],
                   "by_route": dict(self.counters["by_route"]),
                   "by_code": dict(self.counters["by_code"])}
-        return StatsResponse(scheduler=sched,
-                             cache=self.engine.cache_stats(), gateway=gw)
+            hists = dict(self.latency)
+        return StatsResponse(
+            scheduler=sched, cache=self.engine.cache_stats(), gateway=gw,
+            latency={route: h.snapshot()
+                     for route, h in sorted(hists.items())})
 
     def _handle_versions(self, req: VersionsRequest) -> VersionsResponse:
         _req_str("ontology", req.ontology)
@@ -475,10 +513,18 @@ class Gateway:
             self.counters["errors"] += 1
             self.counters["by_code"][e.code] += 1
 
+    def _route_latency(self, route_key: str) -> LatencyHistogram:
+        h = self.latency.get(route_key)
+        if h is None:
+            with self._meta_lock:
+                h = self.latency.setdefault(route_key, LatencyHistogram())
+        return h
+
     def _run(self, route_key: str, req, handler):
         with self._meta_lock:
             self.counters["requests"] += 1
             self.counters["by_route"][route_key] += 1
+        t0 = time.perf_counter()
         try:
             return handler(req)
         except ApiError as e:
@@ -488,6 +534,10 @@ class Gateway:
             err = ApiError("INTERNAL", f"internal error: {e}")
             self._count_error(err)
             raise err from e
+        finally:
+            # errors get timed too: a latency histogram that only sees
+            # successes hides exactly the slow-path (timeout) traffic
+            self._route_latency(route_key).observe(time.perf_counter() - t0)
 
     def _match(self, route: str):
         if not isinstance(route, str):
@@ -505,21 +555,26 @@ class Gateway:
                     break
             else:
                 return name, cls, handler, params
-        raise ApiError("BAD_REQUEST", f"unknown route {route!r}",
-                       status=404, details={"route": route})
+        # a distinct code from BAD_REQUEST: transports can map status
+        # straight from the code, and by_code stats keep bad URLs apart
+        # from malformed payloads
+        raise ApiError("NOT_FOUND", f"unknown route {route!r}",
+                       details={"route": route})
 
     def _build_request(self, route: str,
-                       payload: Optional[Dict[str, Any]]):
+                       payload: Optional[Dict[str, Any]], match=None):
         """Shared route+payload -> (name, handler, request) parsing for
         the sync and async ``handle`` entry points; raises ApiError on
-        any malformed input."""
+        any malformed input. ``match`` lets a transport that already ran
+        :meth:`_match` (for query coercion) pass its result through
+        instead of paying the route table twice per request."""
         if payload is None:
             payload = {}
         if not isinstance(payload, dict):
             raise ApiError(
                 "BAD_REQUEST",
                 f"payload must be an object, got {type(payload).__name__}")
-        name, cls, handler, params = self._match(route)
+        name, cls, handler, params = match or self._match(route)
         clash = sorted(k for k in params
                        if k in payload and payload[k] != params[k])
         if clash:
@@ -532,12 +587,13 @@ class Gateway:
         return name, handler, payload_to(cls, {**payload, **params})
 
     def handle(self, route: str,
-               payload: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+               payload: Optional[Dict[str, Any]] = None, *,
+               match=None) -> Dict[str, Any]:
         """THE entry point: dispatch a route string + payload dict to its
         handler; returns a wire dict (response, or a structured error
         payload — this method never raises on request faults)."""
         try:
-            name, handler, req = self._build_request(route, payload)
+            name, handler, req = self._build_request(route, payload, match)
             return to_wire(self._run(name, req, handler))
         except ApiError as e:
             self._count_error(e)

@@ -29,6 +29,7 @@ CODE_STATUS: Dict[str, int] = {
     "UNKNOWN_MODEL": 404,
     "UNKNOWN_VERSION": 404,
     "UNKNOWN_CLASS": 404,
+    "NOT_FOUND": 404,                # unknown *route* — not a bad payload
     "BAD_REQUEST": 400,
     "TIMEOUT": 408,
     "SHUTTING_DOWN": 503,
@@ -40,6 +41,7 @@ CODE_STATUS: Dict[str, int] = {
 _LEGACY = {
     "UNKNOWN_ONTOLOGY": KeyError, "UNKNOWN_MODEL": KeyError,
     "UNKNOWN_VERSION": KeyError, "UNKNOWN_CLASS": KeyError,
+    "NOT_FOUND": KeyError,
     "BAD_REQUEST": ValueError, "TIMEOUT": TimeoutError,
     "SHUTTING_DOWN": RuntimeError, "INTERNAL": RuntimeError,
 }
@@ -203,8 +205,19 @@ class ClosestConceptsResponse:
 @dataclasses.dataclass
 class DownloadPage:
     """One page of the download payload. ``rows`` is a list of
-    ``[identifier, vector]`` pairs in stable entity-table order;
-    ``next_offset`` is None on the final page."""
+    ``[identifier, vector]`` pairs in stable entity-table order, at the
+    registry's full float32 precision (bit-identical to ``get-vector``
+    for the same class — no endpoint-private quantization);
+    ``next_offset`` is None on the final page.
+
+    ``limit`` is the *effective* page size (the server clamps to its
+    ``page_limit_max``); ``requested_limit`` echoes what the client
+    asked for, so a shrunk page is visible, not silent. ``etag`` is a
+    strong validator over ``(ontology, model, version, offset, limit,
+    requested_limit)`` — a pinned page is immutable, so those
+    coordinates determine the page's exact bytes and an
+    ``If-None-Match`` re-fetch can be answered 304 with no index
+    work."""
     ontology: str
     model: str
     version: str
@@ -213,6 +226,8 @@ class DownloadPage:
     total: int
     rows: List[List[Any]]
     next_offset: Optional[int]
+    requested_limit: Optional[int] = None
+    etag: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -234,9 +249,15 @@ class HealthResponse:
 
 @dataclasses.dataclass
 class StatsResponse:
+    """Ops counters plus per-route latency histograms: ``latency`` maps
+    route name -> a ``LatencyHistogram.snapshot()`` (fixed log-spaced
+    buckets, p50/p99 derivable — see ``repro.core.metrics``); the
+    scheduler's submit->resolve histogram rides in
+    ``scheduler["latency_ms"]``."""
     scheduler: Dict[str, Any]
     cache: Dict[str, Any]
     gateway: Dict[str, Any]
+    latency: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass

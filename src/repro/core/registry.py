@@ -129,6 +129,9 @@ class EmbeddingRegistry:
 
     # --------------------------- download ------------------------------ #
     def to_json(self, ontology: str, model_name: str, version: Optional[str] = None) -> str:
-        """The paper's *download* payload: {class_id: [floats...]}."""
+        """The paper's *download* payload: {class_id: [floats...]}, at
+        full float32 precision — byte-identical to what ``get-vector``
+        and the gateway's paginated/streamed download serve for the same
+        class (the wire-fidelity contract; no endpoint-private rounding)."""
         ids, _, emb, _ = self.get(ontology, model_name, version)
-        return json.dumps({i: [round(float(x), 6) for x in v] for i, v in zip(ids, emb)})
+        return json.dumps({i: [float(x) for x in v] for i, v in zip(ids, emb)})

@@ -67,6 +67,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 import jax.numpy as jnp
 
+from .metrics import LatencyHistogram
 from .registry import EmbeddingRegistry
 
 
@@ -558,7 +559,7 @@ class Ticket:
     directly as keys.
     """
 
-    __slots__ = ("id", "version", "_event", "_result", "_error",
+    __slots__ = ("id", "version", "created", "_event", "_result", "_error",
                  "_error_code", "_error_details", "_cb_lock", "_callbacks")
 
     def __init__(self, tid: int, version: Optional[str] = None):
@@ -566,6 +567,9 @@ class Ticket:
         #: serving version pinned at submit time (None if submit failed
         #: before the version could be resolved)
         self.version = version
+        #: monotonic submit timestamp — the anchor for the scheduler's
+        #: submit->resolve latency histogram
+        self.created = time.monotonic()
         self._event = threading.Event()
         self._result = None          # List[ClosestConcept] or float (sim)
         self._error: Optional[str] = None
@@ -730,6 +734,9 @@ class BatchScheduler:
         #: ticket id -> error message for the most recent failed requests
         #: (bounded at ``max_errors``: oldest entries are dropped)
         self.errors: Dict[int, str] = {}
+        #: submit->resolve latency over every ticket (success or reject) —
+        #: the serving-side histogram the gateway ships in /stats
+        self.latency = LatencyHistogram()
         self.stats = {"submitted": 0, "resolved": 0, "flushes": 0,
                       "loop_flushes": 0, "deadline_flushes": 0,
                       "full_flushes": 0, "batches": 0, "sim_batches": 0,
@@ -745,6 +752,9 @@ class BatchScheduler:
         while len(self.errors) > self.max_errors:
             self.errors.pop(next(iter(self.errors)))
 
+    def _observe_latency(self, ticket: Ticket) -> None:
+        self.latency.observe(time.monotonic() - ticket.created)
+
     def _reject_at_submit(self, ticket: Ticket, msg: str,
                           code: Optional[str] = None,
                           details: Optional[Dict] = None) -> Ticket:
@@ -752,6 +762,7 @@ class BatchScheduler:
             self._record_errors({ticket.id: msg})
             if ticket._reject(msg, code, details):
                 self.stats["resolved"] += 1
+                self._observe_latency(ticket)
         return ticket
 
     def submit(self, req) -> Ticket:
@@ -831,6 +842,7 @@ class BatchScheduler:
             if ticket._reject(msg, code, details):
                 errors[ticket.id] = msg
                 n_resolved += 1
+                self._observe_latency(ticket)
 
         for (ont, model, version, k), items in queues.items():
             # a broken queue (unpublished model, bad version, k < 1) fails
@@ -878,6 +890,7 @@ class BatchScheduler:
                                 results[ticket.id] = float(s)
                             if ticket._resolve(float(s)):
                                 n_resolved += 1
+                                self._observe_latency(ticket)
                         n_batches += 1
                         n_sim += 1
                     continue
@@ -915,6 +928,7 @@ class BatchScheduler:
                             results[ticket.id] = res
                         if ticket._resolve(res):
                             n_resolved += 1
+                            self._observe_latency(ticket)
                     n_batches += 1
                     n_padded += pad
             except Exception as e:
@@ -944,6 +958,7 @@ class BatchScheduler:
                 for ticket, _ in items:
                     if ticket._reject(msg):
                         dropped[ticket.id] = msg
+                        self._observe_latency(ticket)
             with self._lock:
                 self._record_errors(dropped)
                 self.stats["resolved"] += len(dropped)

@@ -13,9 +13,13 @@ through the sharded local+merge kernel path.
     PYTHONPATH=src python -m repro.launch.serve --registry /tmp/biokg \
         --requests 200 --batch 32 --threads 8 --flush-after-ms 2
 
-An HTTP layer is a thin shim over exactly ``gateway.handle(route,
-payload)`` — this driver exercises the same dispatch the production
-WSGI workers would: many independent clients, one scheduler.
+With ``--http PORT`` the driver instead stands up the real HTTP service
+(``repro.api.http``) over the same gateway and serves in the foreground
+until interrupted — the paper's deployment mode:
+
+    PYTHONPATH=src python -m repro.launch.serve --registry /tmp/biokg \
+        --http 8080
+    curl 'localhost:8080/closest-concepts/go/transe?query=GO:0000001&k=5'
 """
 from __future__ import annotations
 
@@ -43,6 +47,12 @@ def main():
     ap.add_argument("--no-shard", action="store_true",
                     help="force the single-device path even on multi-device")
     ap.add_argument("--train-if-missing", action="store_true", default=True)
+    ap.add_argument("--http", type=int, default=None, metavar="PORT",
+                    help="serve the gateway over HTTP on PORT (foreground; "
+                         "0 = ephemeral) instead of running the client "
+                         "session")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="bind address for --http")
     args = ap.parse_args()
 
     from repro.api import Gateway
@@ -60,6 +70,37 @@ def main():
     engine = ServingEngine(registry, mesh=mesh)
     gw = Gateway(engine, max_batch=args.batch,
                  flush_after_ms=args.flush_after_ms)
+
+    if args.http is not None:
+        from repro.api.http import serve_http
+        server = serve_http(gw, host=args.host, port=args.http, start=False)
+        base = server.url
+        print(f"[serve] HTTP service on {base} — the paper's endpoints:")
+        q = "GO:0000001"
+        for line in (
+                f"curl '{base}/health'",
+                f"curl '{base}/get-vector/{args.ontology}/{args.model}"
+                f"?query={q}'",
+                f"curl '{base}/sim/{args.ontology}/{args.model}"
+                f"?a={q}&b=GO:0000002'",
+                f"curl '{base}/closest-concepts/{args.ontology}/{args.model}"
+                f"?query={q}&k=5'",
+                f"curl '{base}/download/{args.ontology}/{args.model}"
+                f"?limit=3'   # ETag + If-None-Match -> 304",
+                f"curl '{base}/download/{args.ontology}/{args.model}"
+                f"?stream=true'   # chunked full table",
+                f"curl '{base}/autocomplete/{args.ontology}/{args.model}"
+                f"?prefix=term'",
+                f"curl '{base}/stats'   # per-route latency histograms"):
+            print(f"[serve]   {line}")
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            print("\n[serve] shutting down")
+        finally:
+            server.server_close()
+            gw.close()
+        return
 
     vers = gw.versions(args.ontology)
     total = gw.download(args.ontology, args.model, version=vers.latest,

@@ -37,12 +37,17 @@ EXAMPLES = [
                             [HIT, ConceptHit("GO:3", "l3", 0.5, "u3")]),
     DownloadPage("go", "transe", "2024-01", offset=0, limit=2, total=5,
                  rows=[["GO:1", [0.1, 0.2]], ["GO:2", [0.3, 0.4]]],
-                 next_offset=2),
+                 next_offset=2, requested_limit=2, etag='"abc123"'),
     DownloadPage("go", "transe", "2024-01", offset=4, limit=2, total=5,
                  rows=[["GO:5", [0.5, 0.5]]], next_offset=None),
+    DownloadPage("go", "transe", "2024-01", offset=0, limit=100, total=5000,
+                 rows=[], next_offset=100, requested_limit=20_000),
     AutocompleteResponse("go", "transe", "2024-01", "posi", ["positive reg"]),
     HealthResponse("ok", "v1", ["go", "hp"], True),
     StatsResponse({"submitted": 4}, {"hits": 1}, {"requests": 9}),
+    StatsResponse({"submitted": 4}, {"hits": 1}, {"requests": 9},
+                  latency={"sim": {"count": 2, "p50_ms": 0.5,
+                                   "bucket_counts": [0, 2]}}),
     VersionsResponse("go", ["2024-01", "2024-02"], "2024-02", ["transe"]),
     LineageResponse("go", "2024-02",
                     {"transe": {"parent_version": "2024-01",
@@ -74,13 +79,15 @@ def test_error_round_trip():
 def test_every_code_has_status_and_legacy_mapping():
     assert set(schema.CODE_STATUS) == {
         "UNKNOWN_ONTOLOGY", "UNKNOWN_MODEL", "UNKNOWN_VERSION",
-        "UNKNOWN_CLASS", "BAD_REQUEST", "TIMEOUT", "SHUTTING_DOWN",
-        "INTERNAL"}
+        "UNKNOWN_CLASS", "NOT_FOUND", "BAD_REQUEST", "TIMEOUT",
+        "SHUTTING_DOWN", "INTERNAL"}
     for code in schema.CODE_STATUS:
         err = ApiError(code, "m")
         assert err.status == schema.CODE_STATUS[code]
         assert isinstance(err.legacy(), Exception)
     assert isinstance(ApiError("UNKNOWN_CLASS", "m").legacy(), KeyError)
+    assert isinstance(ApiError("NOT_FOUND", "m").legacy(), KeyError)
+    assert ApiError("NOT_FOUND", "m").status == 404
     assert isinstance(ApiError("BAD_REQUEST", "m").legacy(), ValueError)
     assert isinstance(ApiError("TIMEOUT", "m").legacy(), TimeoutError)
     assert isinstance(ApiError("SHUTTING_DOWN", "m").legacy(), RuntimeError)

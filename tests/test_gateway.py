@@ -155,11 +155,20 @@ def test_bad_requests_rejected_at_boundary(gw, route, payload):
     assert gateway.scheduler.stats["submitted"] == before["submitted"]
 
 
-def test_unknown_route_is_404_style(gw):
+def test_unknown_route_is_distinct_not_found(gw):
+    """Unknown routes get their own code (the error-taxonomy satellite):
+    a transport can map status straight from the code, and by_code stats
+    keep bad URLs apart from malformed payloads."""
     gateway, _, _ = gw
     for route in ("/no/such/route", "/sim/only-onto", "", "/sim"):
         out = gateway.handle(route)
-        assert out["code"] == "BAD_REQUEST" and out["status"] == 404
+        assert out["code"] == "NOT_FOUND" and out["status"] == 404
+        assert out["details"]["route"] == route
+    assert gateway.counters["by_code"]["NOT_FOUND"] == 4
+    assert gateway.counters["by_code"].get("BAD_REQUEST", 0) == 0
+    # a matched route with a malformed payload stays BAD_REQUEST
+    out = gateway.handle("/sim/go/transe", {"a": "x"})
+    assert out["code"] == "BAD_REQUEST" and out["status"] == 400
 
 
 def test_unknown_coordinates_have_stable_codes(gw):
@@ -373,6 +382,159 @@ def test_closest_concepts_batch_is_one_wave(gw):
     with pytest.raises(ApiError):
         gateway.closest_concepts_batch(
             [ClosestConceptsRequest("go", "transe", "NOPE", k=3)])
+
+
+# ----------------------- wire fidelity (PR 5) -------------------------- #
+def test_download_and_get_vector_serve_identical_bytes(gw):
+    """The wire-fidelity bugfix: the same class must serialize to the
+    same JSON on every endpoint that carries vectors — download pages no
+    longer apply a private 6-decimal rounding that get-vector didn't."""
+    gateway, engine, ids = gw
+    page = gateway.download("go", "transe", limit=N)
+    by_id = {ident: vec for ident, vec in page.rows}
+    for probe in (ids[0], ids[7], ids[N - 1]):
+        vec = gateway.get_vector("go", "transe", probe)
+        assert json.dumps(by_id[probe]) == json.dumps(vec.vector)
+    # full float32 precision survives: a synthetic standard-normal table
+    # is (with overwhelming probability) not representable in 6 decimals
+    idx = engine._index("go", "transe", "2024-02")
+    assert any(v != round(v, 6) for vec in by_id.values() for v in vec)
+    assert by_id[ids[0]] == [float(x) for x in idx.embeddings[0]]
+    # and registry.to_json (the legacy full-download payload) agrees
+    assert json.dumps(dict(page.rows)) == \
+           engine.registry.to_json("go", "transe", "2024-02")
+
+
+# --------------------- pagination contract (PR 5) ---------------------- #
+def test_download_echoes_requested_and_effective_limit(registry):
+    ids = _publish(registry, "go", "2024-01", seed=1)
+    gateway = Gateway(ServingEngine(registry), page_limit_max=8)
+    page = gateway.download("go", "transe", limit=20_000)
+    assert page.requested_limit == 20_000       # what the client asked
+    assert page.limit == 8                      # what the server enforces
+    assert len(page.rows) == 8 and page.next_offset == 8
+    # an unclamped request echoes equal limits
+    page = gateway.download("go", "transe", limit=5)
+    assert page.requested_limit == 5 and page.limit == 5
+    gateway.close()
+
+
+def test_download_offset_at_or_past_total_is_empty_page_not_error(gw):
+    gateway, engine, ids = gw
+    for offset in (N, N + 1, N + 1000):
+        page = gateway.download("go", "transe", offset=offset, limit=7)
+        assert page.rows == [] and page.next_offset is None
+        assert page.total == N and page.offset == offset
+        assert page.etag                        # still a cacheable page
+
+
+def test_download_etag_keyed_on_full_coordinates(gw):
+    from repro.api.gateway import download_etag
+    gateway, engine, ids = gw
+    page = gateway.download("go", "transe", version="2024-02", limit=10)
+    assert page.etag == download_etag("go", "transe", "2024-02", 0, 10)
+    # identical re-fetch -> identical validator (that's what makes the
+    # HTTP 304 path sound); any coordinate change -> different validator
+    assert gateway.download("go", "transe", version="2024-02",
+                            limit=10).etag == page.etag
+    others = [gateway.download("go", "transe", version="2024-01",
+                               limit=10).etag,
+              gateway.download("go", "transe", version="2024-02",
+                               limit=9).etag,
+              gateway.download("go", "transe", version="2024-02", offset=10,
+                               limit=10).etag]
+    assert len({page.etag, *others}) == 4
+    # strong validators identify BYTES: two clamped requests serve the
+    # same rows but echo different requested_limit values, so they must
+    # NOT share an ETag with each other or with an unclamped request
+    clamped = Gateway(engine, page_limit_max=10)
+    a = clamped.download("go", "transe", version="2024-02", limit=5000)
+    b = clamped.download("go", "transe", version="2024-02", limit=6000)
+    assert a.rows == b.rows == page.rows            # same representation…
+    assert len({a.etag, b.etag, page.etag}) == 3    # …different bytes
+    assert a.etag == download_etag("go", "transe", "2024-02", 0, 10, 5000)
+    clamped.close()
+
+
+# ------------------- counter integrity (PR 5 satellite) ---------------- #
+def test_counter_integrity_under_16_thread_mixed_traffic(gw):
+    """requests == sum(by_route), errors == sum(by_code), exactly, after
+    16 threads hammer handle() with a mix of ok and every error class —
+    counter updates and error dedup must be race-free."""
+    import threading
+    gateway, engine, ids = gw
+    n_threads, per = 16, 24
+
+    def worker(tid):
+        for j in range(per):
+            kind = (tid + j) % 4
+            if kind == 0:                                   # ok
+                gateway.handle("/sim/go/transe",
+                               {"a": ids[j % N], "b": ids[(j + 1) % N]})
+            elif kind == 1:                                 # UNKNOWN_CLASS
+                gateway.handle("/closest-concepts/go/transe",
+                               {"query": f"NOPE-{tid}-{j}"})
+            elif kind == 2:                                 # NOT_FOUND
+                gateway.handle(f"/no/such/route/{tid}")
+            else:                                           # BAD_REQUEST
+                gateway.handle("/download/go/transe", {"limit": 0})
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    c = gateway.counters
+    total = n_threads * per
+    # NOT_FOUND never reaches _run, so it counts as an error but not a
+    # routed request — the two identities below pin that bookkeeping
+    assert c["requests"] == sum(c["by_route"].values()) == total * 3 // 4
+    assert c["errors"] == sum(c["by_code"].values()) == total * 3 // 4
+    assert c["by_code"]["UNKNOWN_CLASS"] == total // 4
+    assert c["by_code"]["NOT_FOUND"] == total // 4
+    assert c["by_code"]["BAD_REQUEST"] == total // 4
+    st = gateway.scheduler.stats
+    assert st["resolved"] == st["submitted"]
+
+
+def test_apierror_through_both_handle_layers_counted_once(gw):
+    """An ApiError raised inside _run and re-caught by handle() (or by a
+    deprecated engine delegate above it) must count exactly once."""
+    gateway, engine, ids = gw
+    base = gateway.counters["errors"]
+    out = gateway.handle("/sim/go/transe", {"a": "NOPE", "b": "NOPE2"})
+    assert out["code"] == "UNKNOWN_CLASS"
+    assert gateway.counters["errors"] == base + 1
+    # the engine delegate path stacks engine._legacy over gateway._run
+    with pytest.raises(KeyError):
+        engine.similarity("go", "transe", "NOPE", "NOPE2")
+    assert engine.gateway().counters["errors"] == \
+           engine.gateway().counters["by_code"]["UNKNOWN_CLASS"]
+    assert gateway.counters["errors"] == base + 1      # distinct gateway
+
+
+# --------------------- latency histograms (PR 5) ----------------------- #
+def test_stats_expose_per_route_latency_histograms(gw):
+    gateway, engine, ids = gw
+    for i in range(4):
+        gateway.similarity("go", "transe", ids[i], ids[i + 1])
+    gateway.download("go", "transe", limit=5)
+    gateway.handle("/sim/go/transe", {"a": "NOPE", "b": "NOPE2"})
+    s = gateway.stats()
+    assert s.latency["sim"]["count"] == 5              # errors timed too
+    assert s.latency["download"]["count"] == 1
+    sim = s.latency["sim"]
+    assert sum(sim["bucket_counts"]) == sim["count"]
+    assert len(sim["bucket_counts"]) == len(sim["bucket_le_ms"])
+    assert sim["p50_ms"] is not None and sim["p99_ms"] >= sim["p50_ms"]
+    # scheduler-side submit->resolve histogram covers every ticket
+    st = gateway.scheduler.stats
+    assert s.scheduler["latency_ms"]["count"] == st["resolved"]
+    # /stats itself is timed (on the next snapshot, not its own)
+    s2 = gateway.stats()
+    assert s2.latency["stats"]["count"] >= 1
 
 
 def test_fuzzy_routes_through_scheduler(gw):

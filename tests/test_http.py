@@ -1,0 +1,487 @@
+"""HTTP service layer over the gateway (PR 5 tentpole).
+
+End-to-end over a real socket: wire parity with in-process
+``Gateway.handle`` on every paper endpoint, ``ApiError`` -> HTTP status
+mapping, ETag/If-None-Match 304s with zero gateway/index work, chunked
+streaming download that never buffers the full body, keep-alive, and
+concurrent HTTP clients sharing one scheduler. Fast tier — snapshots
+are published directly, servers bind ephemeral loopback ports."""
+import http.client
+import json
+import threading
+import urllib.error
+import urllib.parse
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.api import Gateway, serve_http
+from repro.core.serving import ServingEngine
+
+N, D = 40, 12
+
+
+def _publish(registry, ontology, version, model="transe", n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = [f"{ontology.upper()}:{i:07d}" for i in range(n)]
+    labels = [f"{ontology} term {i}" for i in range(n)]
+    emb = rng.standard_normal((n, D)).astype(np.float32)
+    registry.publish(ontology, version, model, ids, labels, emb,
+                     ontology_checksum=f"ck-{version}", hyperparameters={"dim": D})
+    return ids
+
+
+@pytest.fixture()
+def served(registry):
+    ids = _publish(registry, "go", "2024-01", seed=1)
+    _publish(registry, "go", "2024-02", seed=2)
+    engine = ServingEngine(registry, cache_capacity=4)
+    gateway = Gateway(engine)
+    server = serve_http(gateway, port=0, stream_page_rows=16)
+    yield server, gateway, engine, ids
+    server.close()
+    gateway.close()
+
+
+def _get(server, path, headers=None):
+    req = urllib.request.Request(server.url + path, headers=headers or {})
+    try:
+        with urllib.request.urlopen(req, timeout=30) as r:
+            return r.status, dict(r.headers), r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+def _post(server, path, payload, headers=None):
+    req = urllib.request.Request(
+        server.url + path, data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json", **(headers or {})})
+    try:
+        with urllib.request.urlopen(req, timeout=30) as r:
+            return r.status, dict(r.headers), r.read()
+    except urllib.error.HTTPError as e:
+        return e.code, dict(e.headers), e.read()
+
+
+# --------------------------- wire parity ------------------------------- #
+def test_every_endpoint_wire_identical_to_in_process_handle(served):
+    """The acceptance criterion: a body served over the socket is the
+    same JSON document ``Gateway.handle`` returns in-process — all five
+    paper endpoints plus the deterministic ops endpoints."""
+    server, gateway, engine, ids = served
+    cases = [
+        ("/get-vector/go/transe", {"query": ids[3]}),
+        ("/sim/go/transe", {"a": ids[0], "b": ids[1]}),
+        ("/closest-concepts/go/transe", {"query": ids[2], "k": 5}),
+        ("/download/go/transe", {"version": "2024-02", "offset": 3,
+                                 "limit": 7}),
+        ("/autocomplete/go/transe", {"prefix": "go term 1", "limit": 4}),
+        ("/health", {}),
+        ("/versions/go", {}),
+        ("/lineage/go", {}),
+    ]
+    for route, payload in cases:
+        query = urllib.parse.urlencode(payload)
+        status, headers, body = _get(server, route + ("?" + query
+                                                      if query else ""))
+        assert status == 200, (route, body)
+        assert headers["Content-Type"] == "application/json"
+        assert json.loads(body) == gateway.handle(route, dict(payload)), route
+
+
+def test_post_json_body_parity_with_get(served):
+    server, gateway, engine, ids = served
+    payload = {"a": ids[0], "b": ids[1]}
+    st_g, _, body_g = _get(server,
+                           "/sim/go/transe?" + urllib.parse.urlencode(payload))
+    st_p, _, body_p = _post(server, "/sim/go/transe", payload)
+    assert st_g == st_p == 200
+    assert json.loads(body_g) == json.loads(body_p)
+
+
+def test_query_string_types_coerced_like_typed_payloads(served):
+    server, gateway, engine, ids = served
+    st, _, body = _get(server, f"/closest-concepts/go/transe?"
+                               f"query={ids[0]}&k=3&fuzzy=false")
+    assert st == 200 and len(json.loads(body)["results"]) == 3
+    # an unparseable int passes through and fails structured, not a 500
+    st, _, body = _get(server, f"/closest-concepts/go/transe?"
+                               f"query={ids[0]}&k=banana")
+    assert st == 400 and json.loads(body)["code"] == "BAD_REQUEST"
+    # `stream` is a download-only transport flag: on any other route it
+    # is an unknown field, exactly as the in-process entry point says
+    st, _, body = _get(server, f"/sim/go/transe?"
+                               f"a={ids[0]}&b={ids[1]}&stream=true")
+    wire = json.loads(body)
+    assert st == 400 and wire["details"]["unknown_fields"] == ["stream"]
+    # conflicting duplicate query params are a 400, not a silent
+    # last-wins; an agreeing duplicate is fine
+    st, _, body = _get(server, f"/sim/go/transe?"
+                               f"a={ids[0]}&a={ids[1]}&b={ids[2]}")
+    wire = json.loads(body)
+    assert st == 400 and wire["details"]["conflicting_fields"] == ["a"]
+    st, _, body = _get(server, f"/sim/go/transe?"
+                               f"a={ids[0]}&a={ids[0]}&b={ids[2]}")
+    assert st == 200
+
+
+# ------------------------- error status mapping ------------------------ #
+def test_apierror_status_and_code_map_onto_http(served):
+    server, gateway, engine, ids = served
+    cases = [
+        ("/no/such/route", 404, "NOT_FOUND"),
+        ("/sim/mars/transe?a=x&b=y", 404, "UNKNOWN_ONTOLOGY"),
+        ("/sim/go/no-model?a=x&b=y", 404, "UNKNOWN_MODEL"),
+        ("/sim/go/transe?a=x&b=y&version=1999-01", 404, "UNKNOWN_VERSION"),
+        (f"/get-vector/go/transe?query=NOPE", 404, "UNKNOWN_CLASS"),
+        (f"/closest-concepts/go/transe?query={ids[0]}&k=0", 400,
+         "BAD_REQUEST"),
+        (f"/sim/go/transe?a={ids[0]}&b={ids[1]}&bogus=1", 400,
+         "BAD_REQUEST"),
+    ]
+    for path, want_status, want_code in cases:
+        status, _, body = _get(server, path)
+        wire = json.loads(body)
+        assert (status, wire["type"], wire["code"]) == \
+               (want_status, "error", want_code), path
+
+
+def test_malformed_post_body_is_structured_400(served):
+    server, gateway, engine, ids = served
+    req = urllib.request.Request(
+        server.url + "/sim/go/transe", data=b"{not json",
+        headers={"Content-Type": "application/json"})
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=30)
+    assert ei.value.code == 400
+    assert json.loads(ei.value.read())["code"] == "BAD_REQUEST"
+    # a JSON array body is equally structured
+    st, _, body = _post(server, "/sim/go/transe", [1, 2, 3])
+    assert st == 400 and json.loads(body)["code"] == "BAD_REQUEST"
+
+
+def test_shutting_down_maps_to_503(served):
+    server, gateway, engine, ids = served
+    # grab a live validator first: even a matching If-None-Match must
+    # answer 503 once the gateway drains (a 304 would keep load
+    # balancers routing to a dying instance)
+    _, headers, _ = _get(server, "/download/go/transe?version=2024-02"
+                                 "&limit=5")
+    gateway.close()
+    st, _, body = _get(server, f"/sim/go/transe?a={ids[0]}&b={ids[1]}")
+    assert st == 503 and json.loads(body)["code"] == "SHUTTING_DOWN"
+    st, _, body = _get(server, "/download/go/transe?version=2024-02"
+                               "&limit=5",
+                       headers={"If-None-Match": headers["ETag"]})
+    assert st == 503 and json.loads(body)["code"] == "SHUTTING_DOWN"
+
+
+def test_post_honors_and_conflict_checks_query_params(served):
+    """POST query params are part of the resource identity: they merge
+    into the body payload (a cache keys on the full URL, so dropping
+    them would associate the wrong body with it); a disagreement is a
+    400, never a silent winner."""
+    server, gateway, engine, ids = served
+    st, _, body = _post(server,
+                        "/download/go/transe?version=2024-01&limit=5", {})
+    page = json.loads(body)
+    assert st == 200 and page["version"] == "2024-01"
+    assert len(page["rows"]) == 5
+    # an agreeing duplicate is fine; a conflict is rejected
+    st, _, body = _post(server, "/sim/go/transe?fuzzy=false",
+                        {"a": ids[0], "b": ids[1], "fuzzy": False})
+    assert st == 200
+    st, _, body = _post(server, "/download/go/transe?version=2024-01",
+                        {"version": "2024-02"})
+    wire = json.loads(body)
+    assert st == 400 and wire["details"]["conflicting_fields"] == ["version"]
+
+
+def test_close_without_serving_never_hangs(registry):
+    """close() before the accept loop ever ran must return, not block
+    in BaseServer.shutdown() waiting on an event only serve_forever
+    sets."""
+    _publish(registry, "go", "2024-01", seed=1)
+    gateway = Gateway(ServingEngine(registry))
+    server = serve_http(gateway, port=0, start=False)
+    closer = threading.Thread(target=server.close, daemon=True)
+    closer.start()
+    closer.join(timeout=10)
+    assert not closer.is_alive(), "close() deadlocked without serve loop"
+    gateway.close()
+
+
+# ------------------------- ETag / If-None-Match ------------------------ #
+def test_pinned_page_refetch_is_304_with_no_gateway_or_index_work(served):
+    server, gateway, engine, ids = served
+    path = "/download/go/transe?version=2024-02&offset=0&limit=10"
+    status, headers, body = _get(server, path)
+    page = json.loads(body)
+    assert status == 200 and headers["ETag"] == page["etag"]
+
+    routed_before = gateway.counters["by_route"]["download"]
+    cache_before = engine.cache_stats()
+    status, headers2, body2 = _get(server, path,
+                                   headers={"If-None-Match": page["etag"]})
+    assert status == 304 and body2 == b""
+    assert headers2["ETag"] == page["etag"]
+    # the 304 never entered the gateway or touched the index cache
+    assert gateway.counters["by_route"]["download"] == routed_before
+    cache_after = engine.cache_stats()
+    assert (cache_after["hits"], cache_after["misses"]) == \
+           (cache_before["hits"], cache_before["misses"])
+    assert server.http_stats["not_modified"] == 1
+    # a stale validator (other coordinates) is NOT a match
+    status, _, body3 = _get(server, path,
+                            headers={"If-None-Match": '"deadbeef"'})
+    assert status == 200 and json.loads(body3) == page
+
+
+def test_unpinned_304_tracks_the_latest_pointer(served, registry):
+    server, gateway, engine, ids = served
+    path = "/download/go/transe?limit=5"             # no version pin
+    status, headers, body = _get(server, path)
+    etag = json.loads(body)["etag"]
+    assert status == 200
+    status, _, _ = _get(server, path, headers={"If-None-Match": etag})
+    assert status == 304                             # latest unchanged
+    # a release lands; the same validator must now MISS
+    _publish(registry, "go", "2024-03", seed=9)
+    engine.invalidate("go", "2024-03")
+    status, _, body = _get(server, path, headers={"If-None-Match": etag})
+    fresh = json.loads(body)
+    assert status == 200 and fresh["version"] == "2024-03"
+    assert fresh["etag"] != etag
+
+
+def test_etag_shortcut_never_hides_validation_errors(served):
+    from repro.api.gateway import download_etag
+    server, gateway, engine, ids = served
+    # bogus coordinates with a hopeful If-None-Match still 404 properly
+    st, _, body = _get(server, "/download/mars/transe?version=v1",
+                       headers={"If-None-Match": '"whatever"'})
+    assert st == 404 and json.loads(body)["code"] == "UNKNOWN_ONTOLOGY"
+    st, _, body = _get(server, "/download/go/transe?limit=0",
+                       headers={"If-None-Match": '"whatever"'})
+    assert st == 400 and json.loads(body)["code"] == "BAD_REQUEST"
+    # ETags are deterministic over public coordinates, so a cache can
+    # hold a MATCHING validator for a version that does not exist — the
+    # shortcut must not vouch for coordinates the gateway would reject
+    forged = download_etag("go", "transe", "2024-99", 0, 10)
+    st, _, body = _get(server, "/download/go/transe?version=2024-99&limit=10",
+                       headers={"If-None-Match": forged})
+    assert st == 404 and json.loads(body)["code"] == "UNKNOWN_VERSION"
+    forged = download_etag("go", "no-model", "2024-02", 0, 10)
+    st, _, body = _get(server, "/download/go/no-model?version=2024-02&limit=10",
+                       headers={"If-None-Match": forged})
+    assert st == 404 and json.loads(body)["code"] == "UNKNOWN_MODEL"
+    # default-limit requests hit the fast path too (the shortcut derives
+    # the default from the schema, not a re-typed literal)
+    st, headers, body = _get(server, "/download/go/transe")
+    st2, _, body2 = _get(server, "/download/go/transe",
+                         headers={"If-None-Match": headers["ETag"]})
+    assert (st, st2) == (200, 304) and body2 == b""
+    # the shortcut is exactly as strict as the full path: a payload the
+    # gateway would 400 (unknown field, route conflict) never 304s even
+    # with a matching validator
+    st, _, body = _get(server, "/download/go/transe?bogus=1",
+                       headers={"If-None-Match": headers["ETag"]})
+    assert st == 400 and json.loads(body)["code"] == "BAD_REQUEST"
+    # 304 is a GET/HEAD concept (RFC 9110): a POST with a matching
+    # validator executes the method and returns the page
+    st, _, body = _post(server, "/download/go/transe", {},
+                        headers={"If-None-Match": headers["ETag"]})
+    assert st == 200 and json.loads(body)["type"] == "download_page"
+    st, _, body = _get(server, "/download/go/transe?ontology=hp",
+                       headers={"If-None-Match": headers["ETag"]})
+    assert st == 400 and json.loads(body)["code"] == "BAD_REQUEST"
+
+
+def test_malformed_content_length_is_400_and_closes_connection(served):
+    """A negative Content-Length must never reach rfile.read (read(-1)
+    blocks until the client hangs up = a leaked handler thread), and a
+    non-numeric one leaves the body unread, so keep-alive would parse
+    garbage — both answer 400 and drop the connection."""
+    import socket
+    server, gateway, engine, ids = served
+    for bad in (b"-5", b"abc", str(1 << 22).encode()):
+        with socket.create_connection(("127.0.0.1", server.port),
+                                      timeout=10) as s:
+            s.sendall(b"POST /sim/go/transe HTTP/1.1\r\n"
+                      b"Host: t\r\nContent-Length: " + bad + b"\r\n\r\n")
+            s.settimeout(10)
+            chunks = []
+            while True:
+                try:
+                    data = s.recv(65536)
+                except socket.timeout:                # pragma: no cover
+                    raise AssertionError(f"no response for {bad!r}")
+                if not data:
+                    break                             # server closed: good
+                chunks.append(data)
+            raw = b"".join(chunks)
+            assert raw.startswith(b"HTTP/1.1 400"), (bad, raw[:80])
+            assert b"BAD_REQUEST" in raw
+            assert b"Connection: close" in raw    # client told, not reset
+
+
+def test_chunked_request_body_is_refused_and_connection_dropped(served):
+    """A Transfer-Encoding body has no Content-Length; reading it is
+    unsupported, and leaving it in the pipe would desync keep-alive —
+    the server answers 400 and closes."""
+    import socket
+    server, gateway, engine, ids = served
+    with socket.create_connection(("127.0.0.1", server.port),
+                                  timeout=10) as s:
+        s.sendall(b"POST /sim/go/transe HTTP/1.1\r\nHost: t\r\n"
+                  b"Transfer-Encoding: chunked\r\n\r\n"
+                  b"5\r\n{\"a\":\r\n0\r\n\r\n")
+        s.settimeout(10)
+        chunks = []
+        while True:
+            data = s.recv(65536)
+            if not data:
+                break                                 # connection closed
+            chunks.append(data)
+        raw = b"".join(chunks)
+        assert raw.startswith(b"HTTP/1.1 400")
+        assert b"Transfer-Encoding" in raw
+
+
+# ------------------------- streaming download -------------------------- #
+def test_stream_download_is_chunked_paged_and_byte_identical(served):
+    server, gateway, engine, ids = served
+    routed_before = gateway.counters["by_route"]["download"]
+    status, headers, body = _get(server, "/download/go/transe?stream=true")
+    assert status == 200
+    assert headers.get("Transfer-Encoding") == "chunked"
+    assert "Content-Length" not in headers
+    assert headers["X-Bio-KGvec2go-Version"] == "2024-02"
+    assert int(headers["X-Bio-KGvec2go-Total"]) == N
+    # stream_page_rows=16 over 40 rows -> exactly 3 cursor pages
+    assert gateway.counters["by_route"]["download"] == routed_before + 3
+    # the paper's download payload, byte-identical to the legacy
+    # full-body endpoints (wire-fidelity satellite covers the precision)
+    assert body.decode() == engine.download("go", "transe")
+    assert body.decode() == engine.registry.to_json("go", "transe",
+                                                    "2024-02")
+    # the server never held the whole body: the largest single chunk is
+    # one page, strictly smaller than the full payload
+    assert 0 < server.http_stats["max_chunk_bytes"] < len(body)
+    assert server.http_stats["streams"] == 1
+
+
+def test_stream_honors_offset_limit_and_version(served):
+    """offset/limit select rows [offset, offset+limit) like the page
+    endpoint; no limit streams to the end of the table (streaming's
+    reason to exist — it is not subject to page_limit_max)."""
+    server, gateway, engine, ids = served
+    st, _, body = _get(server, "/download/go/transe"
+                               "?stream=true&version=2024-01&offset=30&limit=4")
+    rows = json.loads(body)
+    assert st == 200 and list(rows) == ids[30:34]    # rows [30, 34)
+    idx = engine._index("go", "transe", "2024-01")
+    assert rows[ids[30]] == [float(x) for x in idx.embeddings[30]]
+    # a cap above the page size spans pages but still caps the total
+    st, _, body = _get(server, "/download/go/transe?stream=true&limit=20")
+    assert list(json.loads(body)) == ids[:20]        # stream_page_rows=16
+    # no limit -> offset to end of table
+    st, _, body = _get(server, "/download/go/transe?stream=true&offset=30")
+    assert list(json.loads(body)) == ids[30:]
+    # bad stream coordinates fail structured before any chunk is sent
+    st, _, body = _get(server, "/download/mars/transe?stream=true")
+    assert st == 404 and json.loads(body)["code"] == "UNKNOWN_ONTOLOGY"
+    st, _, body = _get(server, "/download/go/transe?stream=true&k=5")
+    assert st == 400 and json.loads(body)["code"] == "BAD_REQUEST"
+    st, _, body = _get(server, "/download/go/transe?stream=true&limit=0")
+    assert st == 400 and json.loads(body)["code"] == "BAD_REQUEST"
+    # a typo'd stream flag is a loud 400, not a quietly served page
+    st, _, body = _get(server, "/download/go/transe?stream=ture")
+    wire = json.loads(body)
+    assert st == 400 and wire["details"]["field"] == "stream"
+    # stream follows the same conflict rules as every other field: a
+    # route/payload coordinate clash and a body/query stream
+    # disagreement are 400s, never a silent winner
+    st, _, body = _get(server, "/download/go/transe"
+                               "?stream=true&ontology=hp&limit=2")
+    wire = json.loads(body)
+    assert st == 400 and wire["details"]["conflicting_fields"] == ["ontology"]
+    st, _, body = _post(server, "/download/go/transe?stream=true",
+                        {"stream": False})
+    wire = json.loads(body)
+    assert st == 400 and wire["details"]["conflicting_fields"] == ["stream"]
+    # agreeing values are fine
+    st, headers, body = _post(server, "/download/go/transe?stream=true",
+                              {"stream": True, "limit": 3})
+    assert st == 200 and headers.get("Transfer-Encoding") == "chunked"
+    assert list(json.loads(body)) == ids[:3]
+
+
+# ----------------------- keep-alive + concurrency ---------------------- #
+def test_keep_alive_serves_many_requests_per_connection(served):
+    server, gateway, engine, ids = served
+    conn = http.client.HTTPConnection("127.0.0.1", server.port, timeout=30)
+    try:
+        for i in range(5):
+            conn.request("GET", f"/sim/go/transe?a={ids[i]}&b={ids[i + 1]}")
+            resp = conn.getresponse()
+            assert resp.status == 200
+            json.loads(resp.read())                  # drain for reuse
+        # mixed framing on one connection: chunked stream then a 304
+        conn.request("GET", "/download/go/transe?stream=true")
+        resp = conn.getresponse()
+        assert resp.status == 200 and len(json.loads(resp.read())) == N
+        page = gateway.download("go", "transe", version="2024-02", limit=3)
+        conn.request("GET",
+                     "/download/go/transe?version=2024-02&limit=3",
+                     headers={"If-None-Match": page.etag})
+        resp = conn.getresponse()
+        assert resp.status == 304 and resp.read() == b""
+    finally:
+        conn.close()
+
+
+def test_concurrent_http_clients_share_one_scheduler(registry):
+    ids = _publish(registry, "go", "2024-01", seed=1)
+    engine = ServingEngine(registry)
+    gateway = Gateway(engine, flush_after_ms=2.0)     # real flush loop
+    server = serve_http(gateway, port=0)
+    n_clients, per = 8, 6
+    failures = []
+
+    def client(cix):
+        conn = http.client.HTTPConnection("127.0.0.1", server.port,
+                                          timeout=30)
+        try:
+            for j in range(per):
+                q = ids[(cix * per + j) % N]
+                conn.request("GET",
+                             f"/closest-concepts/go/transe?query={q}&k=5")
+                resp = conn.getresponse()
+                body = json.loads(resp.read())
+                if resp.status != 200 or len(body["results"]) != 5:
+                    failures.append((cix, j, resp.status))
+        except Exception as e:                        # pragma: no cover
+            failures.append((cix, "exc", repr(e)))
+        finally:
+            conn.close()
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    try:
+        assert failures == []
+        st = gateway.scheduler.stats
+        assert st["submitted"] >= n_clients * per
+        assert st["resolved"] == st["submitted"]
+        # the HTTP transport's traffic shows up in /stats histograms
+        stats = gateway.stats()
+        assert stats.latency["closest-concepts"]["count"] >= n_clients * per
+        assert stats.scheduler["latency_ms"]["count"] == st["resolved"]
+    finally:
+        server.close()
+        gateway.close()
