@@ -36,6 +36,13 @@ corresponds to a system capability it claims:
                       plus the ETag/304 conditional-GET fast path
                       (benchmarks/bench_http.py), written to
                       results/BENCH_http.json
+  B10 http-mp         pre-forked multi-process serving over the shared
+                      mmap store vs a 1-worker pool: q/s at 16 clients
+                      (floor: 1.5x with enough cores), table.f32
+                      page-sharing proof (smaps PSS), wire byte-parity,
+                      cross-process publish->visible latency
+                      (bench_http.py --workers), written to
+                      results/BENCH_http_mp.json
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run                # full benchmarks
@@ -292,7 +299,7 @@ def main():
                          "(fast test tier + one scheduler bench bucket)")
     ap.add_argument("--only", default=None,
                     choices=["kge", "serving", "update", "walks", "sched",
-                             "concurrent", "gateway", "http"])
+                             "concurrent", "gateway", "http", "http-mp"])
     args = ap.parse_args()
 
     if args.fast and args.only is None:
@@ -350,6 +357,14 @@ def main():
             bench_http.write_results(
                 {bench_http.section_key(args.fast): htt})
             report["http"] = htt
+        if args.only in (None, "http-mp"):
+            print("[B10] multi-process HTTP serving (pre-fork pool, "
+                  "shared mmap store)")
+            from benchmarks import bench_http
+            mp_rep = bench_http.run_mp(fast=args.fast)
+            bench_http.write_results_mp(
+                {bench_http.section_key(args.fast): mp_rep})
+            report["http_mp"] = mp_rep
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

@@ -47,6 +47,7 @@ response status, ETag/304 and chunked streaming on ``download``.
 from .aio import AsyncGateway, ticket_future
 from .gateway import API_VERSION, Gateway, download_etag
 from .http import GatewayHTTPServer, serve_http
+from .workers import StoreWatcher, WorkerPool, merge_stats_wires
 from .schema import (CODE_STATUS, ApiError, AutocompleteRequest,
                      AutocompleteResponse, ClosestConceptsRequest,
                      ClosestConceptsResponse, ConceptHit, DownloadPage,
@@ -59,6 +60,7 @@ from .schema import (CODE_STATUS, ApiError, AutocompleteRequest,
 __all__ = [
     "API_VERSION", "AsyncGateway", "Gateway", "ticket_future",
     "GatewayHTTPServer", "serve_http", "download_etag",
+    "WorkerPool", "StoreWatcher", "merge_stats_wires",
     "CODE_STATUS", "ApiError", "from_wire", "payload_to", "to_wire",
     "GetVectorRequest", "VectorResponse",
     "SimilarityRequest", "SimilarityResponse",

@@ -47,10 +47,11 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import socket
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 from urllib.parse import parse_qsl, urlsplit
 
 from .gateway import API_VERSION, Gateway, download_etag
@@ -309,6 +310,16 @@ class GatewayHTTPHandler(BaseHTTPRequestHandler):
                     return self._stream_download(gw, route_params, payload)
             match = (name, cls, _handler, route_params) if name else None
             wire = gw.handle(path, payload, match=match)
+            if wire.get("type") == "stats_response" \
+                    and self.server.stats_hook is not None:
+                # multi-process serving: the pool installs a hook that
+                # folds the sibling workers' counter/histogram snapshots
+                # into this worker's stats body (fixed-bucket histograms
+                # merge by adding counts)
+                try:
+                    wire = self.server.stats_hook(wire) or wire
+                except Exception:
+                    self.server._count("internal_errors")
             status = wire.get("status", 200) if wire.get("type") == "error" \
                 else 200
             headers: Tuple[Tuple[str, str], ...] = ()
@@ -509,9 +520,30 @@ class GatewayHTTPServer(ThreadingHTTPServer):
 
     def __init__(self, gateway: Gateway,
                  address: Tuple[str, int] = ("127.0.0.1", 0), *,
-                 stream_page_rows: int = 2048, verbose_log: bool = False):
-        super().__init__(address, GatewayHTTPHandler)
+                 stream_page_rows: int = 2048, verbose_log: bool = False,
+                 sock: Optional[socket.socket] = None,
+                 stats_hook: Optional[
+                     Callable[[Dict[str, Any]], Dict[str, Any]]] = None):
+        if sock is None:
+            super().__init__(address, GatewayHTTPHandler)
+        else:
+            # adopt an externally-created listening socket (the worker
+            # pool's SO_REUSEPORT socket, or a listener inherited across
+            # fork): skip bind, keep the rest of the server machinery
+            super().__init__(address, GatewayHTTPHandler,
+                             bind_and_activate=False)
+            self.socket.close()          # the unused fresh socket
+            self.socket = sock
+            self.server_address = sock.getsockname()
+            host, port = self.server_address[:2]
+            self.server_name = socket.getfqdn(host)
+            self.server_port = port
+            self.server_activate()       # listen() — idempotent
         self.gateway = gateway
+        #: optional post-processor for /stats wire bodies (multi-process
+        #: merge); data routes are never touched, so wire parity with the
+        #: in-process gateway holds everywhere else
+        self.stats_hook = stats_hook
         #: page size (rows) the streaming path requests per cursor step —
         #: the peak-memory bound of a streamed download
         self.stream_page_rows = stream_page_rows
@@ -590,15 +622,21 @@ class GatewayHTTPServer(ThreadingHTTPServer):
 
 def serve_http(gateway: Gateway, host: str = "127.0.0.1", port: int = 0, *,
                stream_page_rows: int = 2048, start: bool = True,
-               verbose_log: bool = False) -> GatewayHTTPServer:
+               verbose_log: bool = False,
+               sock: Optional[socket.socket] = None,
+               stats_hook=None) -> GatewayHTTPServer:
     """Stand up the HTTP front end over ``gateway``. ``port=0`` binds an
     ephemeral port (see ``server.port``/``server.url``). With ``start``
     (default) the accept loop runs in a daemon thread; pass
     ``start=False`` to drive ``serve_forever()`` yourself (e.g. the
-    ``launch.serve --http`` foreground mode)."""
+    ``launch.serve --http`` foreground mode). ``sock`` adopts an
+    externally-bound listener instead of binding (the worker pool's
+    SO_REUSEPORT path); ``stats_hook`` post-processes /stats bodies
+    (cross-worker merge)."""
     server = GatewayHTTPServer(gateway, (host, port),
                                stream_page_rows=stream_page_rows,
-                               verbose_log=verbose_log)
+                               verbose_log=verbose_log, sock=sock,
+                               stats_hook=stats_hook)
     if start:
         server.start()
     return server

@@ -77,6 +77,47 @@ class LatencyHistogram:
             counts = list(self._counts)
         return self.percentile_from(counts, q)
 
+    @staticmethod
+    def merge_snapshots(snapshots: Sequence[Dict[str, Any]]) -> Dict[str, Any]:
+        """Merge ``snapshot()`` dicts from different histograms — routes,
+        processes, or runs — into one snapshot of the union stream.  The
+        fixed bucket layout is what makes this exact for counts and
+        min/max/sum; p50/p99 are re-derived from the merged counts (bucket
+        resolution, same as any single snapshot).  Empty input or
+        all-empty snapshots merge to an all-zero snapshot."""
+        counts = [0] * (len(BUCKET_BOUNDS_MS) + 1)
+        count, sum_ms = 0, 0.0
+        min_ms: Optional[float] = None
+        max_ms: Optional[float] = None
+        for s in snapshots:
+            sc = s.get("bucket_counts") or []
+            if len(sc) != len(counts):
+                raise ValueError(
+                    f"incompatible bucket layout: {len(sc)} buckets, "
+                    f"expected {len(counts)}")
+            for i, c in enumerate(sc):
+                counts[i] += c
+            count += s.get("count", 0)
+            sum_ms += s.get("sum_ms") or 0.0
+            for v in (s.get("min_ms"),):
+                if v is not None and (min_ms is None or v < min_ms):
+                    min_ms = v
+            for v in (s.get("max_ms"),):
+                if v is not None and (max_ms is None or v > max_ms):
+                    max_ms = v
+        out: Dict[str, Any] = {
+            "count": count,
+            "sum_ms": round(sum_ms, 4),
+            "min_ms": None if min_ms is None else round(min_ms, 4),
+            "max_ms": None if max_ms is None else round(max_ms, 4),
+            "bucket_le_ms": [round(b, 5) for b in BUCKET_BOUNDS_MS] + ["inf"],
+            "bucket_counts": counts,
+        }
+        for name, q in (("p50_ms", 50.0), ("p99_ms", 99.0)):
+            p = LatencyHistogram.percentile_from(counts, q)
+            out[name] = None if p is None else round(p, 4)
+        return out
+
     def snapshot(self) -> Dict[str, Any]:
         """JSON-able state: bucket bounds + counts (merge by adding
         counts), totals, and the derived p50/p99 for convenience."""

@@ -98,6 +98,38 @@ class EmbeddingRegistry:
             meta,
         )
 
+    def get_serving(
+        self, ontology: str, model_name: str, version: Optional[str] = None
+    ) -> Tuple[List[str], List[str], np.ndarray, np.ndarray, Dict[str, Any]]:
+        """Serve-path load: ``(entity_ids, labels, table, norms, meta)``.
+
+        When the raw mmap layout exists (every publish writes it), ``table``
+        and ``norms`` are read-only ``np.memmap`` views — zero copies, pages
+        shared across worker processes.  Pre-raw snapshots fall back to the
+        ``.npz`` interchange format with norms computed on the spot; either
+        way the (table, norms) pair is bit-identical."""
+        version = version or self.store.latest_version(ontology)
+        if version is None:
+            raise KeyError(f"no published versions for ontology {ontology!r}")
+        meta = self.store.load_metadata(ontology, version, model_name)
+        if not validate_prov(meta.get("prov", {})):
+            raise ValueError(
+                f"corrupt PROV metadata for {ontology}/{version}/{model_name}")
+        if self.store.has_raw(ontology, version, model_name):
+            table, norms, header = self.store.open_table(
+                ontology, version, model_name)
+            return header["ids"], header["labels"], table, norms, meta
+        arrays, _ = self.store.load(ontology, version, model_name)
+        emb = np.asarray(arrays["embeddings"], dtype=np.float32)
+        norms = np.linalg.norm(emb, axis=1).astype(np.float32)
+        return ([str(x) for x in arrays["entity_ids"]],
+                [str(x) for x in arrays["labels"]], emb, norms, meta)
+
+    def seal(self, ontology: str, version: str) -> None:
+        """Mark ``version`` fully published (all models written) — the
+        atomic visibility point for cross-process snapshot watchers."""
+        self.store.seal(ontology, version)
+
     def get_params(
         self, ontology: str, model_name: str, version: Optional[str] = None
     ) -> Tuple[Dict[str, np.ndarray], Dict[str, List[str]]]:

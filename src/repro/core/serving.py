@@ -56,6 +56,7 @@ Architecture (PR 1 hardening — see ROADMAP.md "Serving architecture"):
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import functools
 import itertools
@@ -74,6 +75,18 @@ from .registry import EmbeddingRegistry
 def _norm_label(s: str) -> str:
     """The paper's 'automatic normalization of case and whitespace'."""
     return " ".join(s.strip().lower().split())
+
+
+def _prefix_upper_bound(p: str) -> Optional[str]:
+    """Smallest string greater than every string with prefix ``p`` — the
+    exclusive upper bound of the prefix range in a sorted array.  None when
+    no such string exists (p empty or all chars at the codepoint maximum),
+    meaning the range extends to the end of the array."""
+    for i in range(len(p) - 1, -1, -1):
+        c = ord(p[i])
+        if c < 0x10FFFF:
+            return p[:i] + chr(c + 1)
+    return None
 
 
 def _edit_distance_capped(a: str, b: str, cap: int) -> int:
@@ -104,33 +117,52 @@ class ClosestConcept:
 
 
 class EmbeddingIndex:
-    """One (ontology, version, model) embedding table, ready to query."""
+    """One (ontology, version, model) embedding table, ready to query.
+
+    Zero-copy contract: ``embeddings`` may be a read-only ``np.memmap``
+    view over the store's raw layout (``SnapshotStore.open_table``) and is
+    kept as-is — never copied into a private array.  Normalization is
+    lazy: per-row L2 norms come from the sidecar (``norms=``, also a
+    memmap view) or are computed once here, and unit rows are produced on
+    demand by ``unit_rows``.  The only private table is the device-resident
+    unit copy the top-k kernels need; host memory for the table itself
+    stays in the shared page cache, so N worker processes serving the same
+    snapshot pay for it once.
+    """
 
     def __init__(self, entity_ids: Sequence[str], labels: Sequence[str],
                  embeddings: np.ndarray, url_prefix: str = "https://bio.kgvec2go.org/concept/",
-                 use_pallas: Optional[bool] = None, mesh=None):
+                 use_pallas: Optional[bool] = None, mesh=None,
+                 norms: Optional[np.ndarray] = None):
         self.entity_ids = list(entity_ids)
         self.labels = list(labels)
         self.url_prefix = url_prefix
         #: kernel backend: None = REPRO_USE_PALLAS env dispatch
         self.use_pallas = use_pallas
-        emb = np.asarray(embeddings, dtype=np.float32)
-        norms = np.linalg.norm(emb, axis=1, keepdims=True)
+        emb = np.asarray(embeddings)
+        if emb.dtype != np.float32:
+            emb = emb.astype(np.float32)
         self.embeddings = emb
-        self.unit = emb / np.maximum(norms, 1e-12)
+        if norms is None:
+            norms = np.linalg.norm(emb, axis=1)
+        self.norms = np.asarray(norms)
         from ..kernels import ops as kops
         # only shard when the mesh actually has >1 device on the data axis;
         # otherwise the single-device fast path below is strictly better
         self.mesh = mesh if kops.mesh_data_shards(mesh) > 1 else None
-        # device-resident copy of the immutable table: converting (N, d)
-        # per top-k call would dominate the serving hot path at paper scale
+        # device-resident copy of the immutable *unit* table: converting
+        # (N, d) per top-k call would dominate the serving hot path at
+        # paper scale. The host-side unit array is transient — dropped as
+        # soon as the device copy exists.
+        unit = self.unit_rows(slice(None))
         if self.mesh is not None:
             # laid out P("data", None): each device holds an (N/devices, d)
             # row block; top-k goes through the sharded local+merge path
-            self._unit_jnp, self._n_real = kops.shard_table(self.unit, self.mesh)
+            self._unit_jnp, self._n_real = kops.shard_table(unit, self.mesh)
         else:
-            self._unit_jnp = jnp.asarray(self.unit)
+            self._unit_jnp = jnp.asarray(unit)
             self._n_real = emb.shape[0]
+        del unit
         self._id_to_row = {i: r for r, i in enumerate(self.entity_ids)}
         self._label_to_row: Dict[str, int] = {}
         for r, lbl in enumerate(self.labels):
@@ -140,22 +172,41 @@ class EmbeddingIndex:
 
     @property
     def nbytes(self) -> int:
-        return int(self.embeddings.nbytes + self.unit.nbytes)
+        """Host bytes addressed by this index (table + norms). With an
+        mmap-backed table these pages are shared and reclaimable, so this
+        is an upper bound on private memory, not a measure of it."""
+        return int(self.embeddings.nbytes + self.norms.nbytes)
+
+    def unit_rows(self, rows) -> np.ndarray:
+        """L2-normalized rows, computed on demand: bit-identical to
+        slicing the eagerly-normalized full table (division is
+        elementwise), without ever materializing a second (N, d) array on
+        the host for the common small-batch case."""
+        sub = np.asarray(self.embeddings[rows], dtype=np.float32)
+        n = np.asarray(self.norms[rows], dtype=np.float32)
+        return sub / np.maximum(n[..., None], 1e-12)
+
+    @property
+    def unit(self) -> np.ndarray:
+        """Full normalized table, materialized per call — kept for
+        callers/tests that want the whole matrix; hot paths use
+        ``unit_rows`` or the device-resident copy."""
+        return self.unit_rows(slice(None))
 
     # ------------------------------------------------------------------ #
     def autocomplete(self, prefix: str, limit: int = 10) -> List[str]:
-        """Concept labels starting with ``prefix`` (paper §6 future work)."""
-        import bisect
+        """Concept labels starting with ``prefix`` (paper §6 future work).
+
+        Pure bisect range lookup on the sorted normalized labels: the
+        matches are exactly ``[bisect_left(p), bisect_left(upper_bound(p))``
+        — no scan, no window cap, O(log n + limit)."""
         p = _norm_label(prefix)
         lo = bisect.bisect_left(self._sorted_labels, p)
-        out = []
-        for lbl in self._sorted_labels[lo:lo + max(limit * 4, limit)]:
-            if not lbl.startswith(p):
-                break
-            out.append(self.labels[self._label_to_row[lbl]])
-            if len(out) == limit:
-                break
-        return out
+        ub = _prefix_upper_bound(p)
+        hi = (len(self._sorted_labels) if ub is None
+              else bisect.bisect_left(self._sorted_labels, ub, lo))
+        return [self.labels[self._label_to_row[lbl]]
+                for lbl in self._sorted_labels[lo:min(hi, lo + limit)]]
 
     def resolve_fuzzy(self, query: str, max_edits: int = 2
                       ) -> Optional[Tuple[int, str]]:
@@ -200,7 +251,8 @@ class EmbeddingIndex:
             missing = [q for q, r in ((a, ra), (b, rb)) if r is None]
             raise KeyError(
                 "unknown class(es): " + ", ".join(repr(m) for m in missing))
-        return float(np.dot(self.unit[ra], self.unit[rb]))
+        ua, ub = self.unit_rows([ra, rb])
+        return float(np.dot(ua, ub))
 
     def top_k(self, queries: Sequence[str], k: int = 10,
               exclude_self: bool = True) -> List[List[ClosestConcept]]:
@@ -225,7 +277,7 @@ class EmbeddingIndex:
         if k < 1:
             raise ValueError(f"k must be >= 1, got {k}")
         rows = np.asarray(list(rows), dtype=np.int32)
-        qvec = self.unit[rows]                                  # (Q, d)
+        qvec = self.unit_rows(rows)                             # (Q, d)
         excl = rows if exclude_self else np.full(len(rows), -1, np.int32)
         from ..kernels import ops as kops
         if self.mesh is not None:
@@ -284,6 +336,18 @@ class LRUIndexCache:
             while len(self._data) > self.capacity:
                 self._data.popitem(last=False)
                 self.evictions += 1
+
+    def pop_where(self, pred) -> int:
+        """Drop every entry whose key satisfies ``pred`` (not counted as
+        evictions — this is deliberate invalidation, not pressure).
+        Returns how many were dropped.  Dropping an mmap-backed index
+        releases the map once in-flight queries holding row views finish,
+        at which point the snapshot files can be unlinked."""
+        with self._lock:
+            doomed = [k for k in self._data if pred(k)]
+            for k in doomed:
+                del self._data[k]
+            return len(doomed)
 
     def __len__(self) -> int:
         with self._lock:
@@ -351,9 +415,12 @@ class ServingEngine:
         key = (ontology, model, version)
         idx = self.cache.get(key)
         if idx is None:
-            ids, labels, emb, _ = self.registry.get(ontology, model, version)
-            idx = EmbeddingIndex(ids, labels, emb, use_pallas=self.use_pallas,
-                                 mesh=self.mesh)
+            # serve path: zero-copy mmap view + sidecar norms when the raw
+            # layout exists; .npz fallback for pre-raw snapshots
+            ids, labels, table, norms, _ = self.registry.get_serving(
+                ontology, model, version)
+            idx = EmbeddingIndex(ids, labels, table, norms=norms,
+                                 use_pallas=self.use_pallas, mesh=self.mesh)
             self.cache.put(key, idx)
         return idx
 
@@ -363,8 +430,22 @@ class ServingEngine:
         publish. Old-version indices are NOT dropped — version-pinned
         in-flight queries keep working; the LRU ages them out. Registered
         invalidate listeners (the gateway's versions/lineage caches) are
-        notified after the swap."""
+        notified after the swap.
+
+        Before the swap, the new version's indices are warm-built for
+        every model this engine is currently serving (anything cached for
+        the ontology), so the first post-publish query never pays the
+        index build — it hits a cache that already has the new version."""
         v = new_version or self.registry.store.latest_version(ontology)
+        if v is not None:
+            warm = {m for (o, m, _) in self.cache.keys() if o == ontology}
+            for m in sorted(warm):
+                try:
+                    self._index(ontology, m, v)
+                except Exception:
+                    # a model absent from the new version fails on first
+                    # query exactly as it did before warm-building existed
+                    pass
         with self._lock:
             if v is None:
                 self._latest.pop(ontology, None)
@@ -377,6 +458,20 @@ class ServingEngine:
             except Exception:
                 pass     # a broken listener must not break the updater
         return v
+
+    def drop_version(self, ontology: str, version: str) -> int:
+        """Release every cached index for (ontology, \\*, version) so their
+        mmap references drop and the snapshot's files can be unlinked once
+        any in-flight queries finish (the maps close on GC). If the latest
+        pointer names the dropped version it is cleared and re-resolves
+        from the registry on next use. Returns the number of indices
+        dropped."""
+        n = self.cache.pop_where(
+            lambda key: key[0] == ontology and key[2] == version)
+        with self._lock:
+            if self._latest.get(ontology) == version:
+                self._latest.pop(ontology, None)
+        return n
 
     def add_invalidate_listener(self, fn) -> None:
         """Register ``fn(ontology, new_version)`` to run after every
@@ -882,8 +977,8 @@ class BatchScheduler:
                                 live.append((ticket, ra, rb))
                         if not live:
                             continue
-                        ua = index.unit[[ra for _, ra, _ in live]]
-                        ub = index.unit[[rb for _, _, rb in live]]
+                        ua = index.unit_rows([ra for _, ra, _ in live])
+                        ub = index.unit_rows([rb for _, _, rb in live])
                         scores = np.einsum("ij,ij->i", ua, ub)
                         for (ticket, _, _), s in zip(live, scores):
                             if collect:

@@ -234,6 +234,10 @@ class Updater:
         # persist the parsed release so the *next* update can diff against
         # it (exact GraphDelta) even after a process restart
         self.registry.store.save_graph(channel.name, plan.version, kg)
+        # seal AFTER every model is on disk: cross-process snapshot
+        # watchers adopt a version only once it is sealed, so a multi-model
+        # publish never becomes visible half-written
+        self.registry.seal(channel.name, plan.version)
         if self.engine is not None:
             # atomic latest-pointer swap: in-flight queries pinned to the
             # old version finish consistently; new queries see `version`

@@ -53,6 +53,11 @@ def main():
                          "session")
     ap.add_argument("--host", default="127.0.0.1",
                     help="bind address for --http")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="with --http: pre-fork this many worker "
+                         "processes (SO_REUSEPORT) over the shared "
+                         "mmap-resident snapshot store; 1 = classic "
+                         "single-process serving")
     args = ap.parse_args()
 
     from repro.api import Gateway
@@ -63,8 +68,48 @@ def main():
     registry = EmbeddingRegistry(args.registry)
     if not registry.versions(args.ontology):
         print(f"[serve] registry empty; training {args.ontology} snapshots")
-        from .train import train_kge
-        train_kge(args.ontology, args.registry, steps=150, n_terms=800)
+        if args.http is not None and args.workers > 1:
+            # train in a subprocess: training runs jax ops, and an
+            # initialized XLA backend must never cross the fork the
+            # worker pool is about to do
+            import os
+            import subprocess
+            import sys
+            code = ("from repro.launch.train import train_kge; "
+                    f"train_kge({args.ontology!r}, {args.registry!r}, "
+                    f"steps=150, n_terms=800)")
+            env = dict(os.environ)
+            env["PYTHONPATH"] = os.pathsep.join(
+                p for p in sys.path if p) + os.pathsep + env.get(
+                    "PYTHONPATH", "")
+            subprocess.run([sys.executable, "-c", code], env=env, check=True)
+        else:
+            from .train import train_kge
+            train_kge(args.ontology, args.registry, steps=150, n_terms=800)
+
+    if args.http is not None and args.workers > 1:
+        from repro.api.workers import WorkerPool
+        pool = WorkerPool(args.registry, port=args.http, host=args.host,
+                          workers=args.workers, max_batch=args.batch,
+                          flush_after_ms=args.flush_after_ms)
+        pool.start()
+        pool.wait_ready()
+        base = pool.url
+        print(f"[serve] HTTP service on {base} — {args.workers} workers "
+              f"(pids {', '.join(map(str, pool.pids()))}; "
+              f"{'SO_REUSEPORT' if pool.reuseport else 'inherited listener'})")
+        print(f"[serve]   curl '{base}/health'")
+        print(f"[serve]   curl '{base}/closest-concepts/{args.ontology}/"
+              f"{args.model}?query=GO:0000001&k=5'")
+        print(f"[serve]   curl '{base}/stats'   # merged across workers")
+        try:
+            import threading
+            threading.Event().wait()
+        except KeyboardInterrupt:
+            print("\n[serve] shutting down worker pool")
+        finally:
+            pool.stop()
+        return
 
     mesh = None if args.no_shard else make_serving_mesh()
     engine = ServingEngine(registry, mesh=mesh)

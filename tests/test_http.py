@@ -485,3 +485,46 @@ def test_concurrent_http_clients_share_one_scheduler(registry):
     finally:
         server.close()
         gateway.close()
+
+
+# ------------------- HTTP/1.1 pipelining (PR 6) ------------------------ #
+def test_http11_pipelining_on_one_connection(served):
+    """Several requests written back-to-back on one connection before any
+    response is read: HTTP/1.1 requires in-order responses, each complete
+    and byte-identical to its non-pipelined equivalent."""
+    import socket
+    server, gateway, _, ids = served
+    paths = [f"/get-vector/go/transe?query={ids[0]}",
+             "/versions/go",
+             f"/sim/go/transe?a={ids[1]}&b={ids[2]}",
+             f"/autocomplete/go/transe?prefix=go%20term&limit=5",
+             f"/closest-concepts/go/transe?query={ids[3]}&k=4"]
+    blob = b"".join(f"GET {p} HTTP/1.1\r\nHost: t\r\n\r\n".encode()
+                    for p in paths)
+
+    with socket.create_connection(("127.0.0.1", server.port),
+                                  timeout=30) as s:
+        s.sendall(blob)                        # all five, no reads between
+        f = s.makefile("rb")
+        bodies = []
+        for _ in paths:
+            status = f.readline()
+            assert b" 200 " in status, status
+            clen = None
+            while True:
+                line = f.readline()
+                if line in (b"\r\n", b"\n", b""):
+                    break
+                key, _, val = line.partition(b":")
+                if key.strip().lower() == b"content-length":
+                    clen = int(val)
+            assert clen is not None
+            bodies.append(f.read(clen))
+
+    for path, body in zip(paths, bodies):
+        route, _, query = path.partition("?")
+        payload = {}
+        for k, v in urllib.parse.parse_qsl(query):
+            payload[k] = int(v) if v.isdigit() else v
+        expect = json.dumps(gateway.handle(route, payload)).encode()
+        assert body == expect, path

@@ -1,0 +1,181 @@
+"""Raw mmap snapshot layout (PR 6 tentpole, layer 1).
+
+Every publish writes a serve-optimized sidecar next to the ``.npz``
+interchange file: ``table.f32`` (rows padded to a 64-byte stride +
+per-row float32 L2 norms) and ``table.json`` (geometry + ids/labels).
+These tests pin the layout contract: bit-parity with the npz payload,
+read-only enforcement on the views, truncation detection, seal markers,
+raw-first/npz-fallback in ``get_serving``, and that dropping a version
+actually releases the map so the files can be reclaimed.
+"""
+import gc
+import json
+import weakref
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (RAW_ALIGN, RAW_FORMAT, RAW_HEADER,
+                                    RAW_TABLE, SEAL_MARKER)
+from repro.core.serving import EmbeddingIndex, ServingEngine
+
+N, D = 40, 12
+
+
+def _publish(registry, ontology, version, model="transe", n=N, d=D, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = [f"{ontology.upper()}:{i:07d}" for i in range(n)]
+    labels = [f"{ontology} term {i}" for i in range(n)]
+    emb = rng.standard_normal((n, d)).astype(np.float32)
+    registry.publish(ontology, version, model, ids, labels, emb,
+                     ontology_checksum=f"ck-{version}",
+                     hyperparameters={"dim": d})
+    return ids, labels, emb
+
+
+# ------------------------- layout contract ---------------------------- #
+def test_publish_writes_raw_layout(registry):
+    _publish(registry, "go", "2024-01")
+    store = registry.store
+    assert store.has_raw("go", "2024-01", "transe")
+    d = store._dir("go", "2024-01", "transe")
+    header = json.loads((d / RAW_HEADER).read_text())
+    assert header["format"] == RAW_FORMAT
+    assert header["rows"] == N and header["dim"] == D
+    assert header["align_bytes"] == RAW_ALIGN
+    # stride: rows pad up to the next 64-byte multiple
+    stride = header["stride_floats"]
+    assert stride * 4 % RAW_ALIGN == 0 and stride >= D
+    assert header["norms_offset_floats"] == N * stride
+    # file holds exactly the padded table + the norms vector
+    assert (d / RAW_TABLE).stat().st_size == (N * stride + N) * 4
+
+
+def test_raw_npz_bit_parity(registry):
+    ids, labels, emb = _publish(registry, "go", "2024-01", seed=3)
+    table, norms, header = registry.store.open_table("go", "2024-01",
+                                                     "transe")
+    # the table view is the npz payload, bit for bit
+    np.testing.assert_array_equal(np.asarray(table), emb)
+    # norms match what the serve path used to compute at load time
+    np.testing.assert_array_equal(
+        np.asarray(norms), np.linalg.norm(emb, axis=1).astype("<f4"))
+    assert header["ids"] == ids and header["labels"] == labels
+    # both views are windows over ONE map (shared pages, one munmap)
+    assert isinstance(table.base, np.ndarray) or isinstance(
+        table.base, np.memmap)
+    assert table.base.base is norms.base or table.base is norms.base
+
+
+def test_open_table_is_read_only(registry):
+    _publish(registry, "go", "2024-01")
+    table, norms, _ = registry.store.open_table("go", "2024-01", "transe")
+    with pytest.raises(ValueError):
+        table[0, 0] = 1.0
+    with pytest.raises(ValueError):
+        norms[0] = 1.0
+
+
+def test_truncated_table_detected(registry):
+    _publish(registry, "go", "2024-01")
+    d = registry.store._dir("go", "2024-01", "transe")
+    raw = (d / RAW_TABLE).read_bytes()
+    (d / RAW_TABLE).write_bytes(raw[: len(raw) // 2])
+    with pytest.raises(ValueError, match="truncated"):
+        registry.store.open_table("go", "2024-01", "transe")
+
+
+def test_unknown_format_rejected(registry):
+    _publish(registry, "go", "2024-01")
+    d = registry.store._dir("go", "2024-01", "transe")
+    header = json.loads((d / RAW_HEADER).read_text())
+    header["format"] = "biokg-raw-v999"
+    (d / RAW_HEADER).write_text(json.dumps(header))
+    with pytest.raises(ValueError, match="unknown raw layout"):
+        registry.store.open_table("go", "2024-01", "transe")
+
+
+# ------------------------ serve-path loading -------------------------- #
+def test_get_serving_prefers_raw(registry):
+    ids, labels, emb = _publish(registry, "go", "2024-01", seed=5)
+    gids, glabels, table, norms, meta = registry.get_serving("go", "transe")
+    assert gids == ids and glabels == labels
+    assert isinstance(table.base, np.ndarray)   # memmap view, not a copy
+    np.testing.assert_array_equal(np.asarray(table), emb)
+    assert meta["prov"]
+
+
+def test_get_serving_npz_fallback_bit_identical(registry):
+    """Pre-raw snapshots (older publishes) still serve — same numbers."""
+    _publish(registry, "go", "2024-01", seed=6)
+    raw = registry.get_serving("go", "transe")
+    d = registry.store._dir("go", "2024-01", "transe")
+    (d / RAW_TABLE).unlink()
+    (d / RAW_HEADER).unlink()
+    assert not registry.store.has_raw("go", "2024-01", "transe")
+    fb = registry.get_serving("go", "transe")
+    assert fb[0] == raw[0] and fb[1] == raw[1]
+    np.testing.assert_array_equal(np.asarray(fb[2]), np.asarray(raw[2]))
+    np.testing.assert_array_equal(np.asarray(fb[3]), np.asarray(raw[3]))
+
+
+def test_embedding_index_zero_copy_over_mmap(registry):
+    """The serving index keeps the memmap as its table — no private
+    full-table copy — and unit rows match the eager normalize."""
+    _, _, emb = _publish(registry, "go", "2024-01", seed=7)
+    ids, labels, table, norms, _ = registry.get_serving("go", "transe")
+    idx = EmbeddingIndex(ids, labels, table, norms=norms)
+    # same pages, not a private copy
+    assert np.shares_memory(idx.embeddings, table)
+    assert np.shares_memory(idx.norms, norms)
+    eager = emb / np.linalg.norm(emb, axis=1, keepdims=True)
+    got = idx.unit_rows(list(range(N)))
+    np.testing.assert_array_equal(
+        got, (emb / np.maximum(np.linalg.norm(emb, axis=1,
+                                              keepdims=True), 1e-12)))
+    assert np.allclose(got, eager, atol=1e-7)
+
+
+# ---------------------------- seal markers ---------------------------- #
+def test_seal_and_sealed_versions(registry):
+    _publish(registry, "go", "2024-01")
+    _publish(registry, "go", "2024-02")
+    assert registry.store.sealed_versions("go") == []
+    registry.seal("go", "2024-01")
+    assert registry.store.is_sealed("go", "2024-01")
+    assert not registry.store.is_sealed("go", "2024-02")
+    assert registry.store.sealed_versions("go") == ["2024-01"]
+    registry.seal("go", "2024-02")
+    assert registry.store.sealed_versions("go") == ["2024-01", "2024-02"]
+    marker = json.loads(
+        (registry.store.root / "go" / "2024-02" / SEAL_MARKER).read_text())
+    assert marker["models"] == ["transe"]
+
+
+# ------------------------ stale-mmap reclamation ----------------------- #
+def test_drop_version_releases_mmap(registry):
+    """After invalidate + drop_version, no live view pins the old map —
+    the GC closes it and the snapshot files are reclaimable."""
+    ids, _, _ = _publish(registry, "go", "2024-01", seed=1)
+    engine = ServingEngine(registry, cache_capacity=4)
+    engine.similarity("go", "transe", ids[0], ids[1])   # builds the index
+    old = engine.cache.get(("go", "transe", "2024-01"))
+    assert old is not None
+    ref = weakref.ref(old.embeddings)
+    del old
+
+    _publish(registry, "go", "2024-02", seed=2)
+    engine.invalidate("go", "2024-02")
+    dropped = engine.drop_version("go", "2024-01")
+    assert dropped == 1
+    assert ("go", "transe", "2024-01") not in engine.cache
+    gc.collect()
+    assert ref() is None, "stale mmap still referenced after drop_version"
+    # the files are now unlinkable and the version dir fully removable
+    d = registry.store._dir("go", "2024-01", "transe")
+    (d / RAW_TABLE).unlink()
+    assert not (d / RAW_TABLE).exists()
+    # serving continues on the new version
+    assert engine.latest_version("go") == "2024-02"
+    assert isinstance(engine.similarity("go", "transe", ids[0], ids[1]),
+                      float)

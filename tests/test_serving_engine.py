@@ -250,3 +250,94 @@ def test_closest_concepts_never_returns_sentinels(tmp_path_factory, k, n, seed):
     scores = [c.score for c in res]
     assert scores == sorted(scores, reverse=True)
     assert all(-1.001 <= s <= 1.001 for s in scores)    # real cosine, no -1e30
+
+
+# ---------------- autocomplete: bisect range lookup -------------------- #
+def _naive_autocomplete(idx, prefix, limit):
+    from repro.core.serving import _norm_label
+    p = _norm_label(prefix)
+    hits = [lbl for lbl in idx._sorted_labels if lbl.startswith(p)][:limit]
+    return [idx.labels[idx._label_to_row[lbl]] for lbl in hits]
+
+
+def test_autocomplete_bisect_matches_naive_scan():
+    """The O(log n) bisect range must return exactly what a full
+    startswith scan returns — including unicode edges, case/whitespace
+    normalization collisions, and prefixes at the codepoint maximum."""
+    labels = ["Apoptosis", "apoptotic process", "  Apoptotic   Signaling ",
+              "ápoptosis", "zz\U0010FFFF", "zz\U0010FFFFa", "zz",
+              "Zz top", "ZZ", "heart development", "heart", "hear",
+              "héart", "\U0010FFFF\U0010FFFF", "a", "A b", "ab", "a c"]
+    rng = np.random.default_rng(0)
+    # plus bulk labels with heavy shared prefixes
+    labels += ["".join(rng.choice(list("abc "), size=rng.integers(1, 7)))
+               for _ in range(150)]
+    ids = [f"X:{i:05d}" for i in range(len(labels))]
+    emb = rng.standard_normal((len(labels), 6)).astype(np.float32)
+    idx = EmbeddingIndex(ids, labels, emb)
+
+    prefixes = ["", " ", "a", "A", "ap", "Apop", "apoptotic p", "z", "zz",
+                "zz\U0010FFFF", "\U0010FFFF", "h", "he", "hea", "heart",
+                "heart ", "b", "ba", "c", "ab", "a ", "nope", "é",
+                "á", "aa", "ca", "cb", "ac"]
+    prefixes += [lbl[:j] for lbl in labels[:30] for j in (1, 2, 3)]
+    for p in prefixes:
+        for limit in (1, 3, 10, 10_000):
+            assert idx.autocomplete(p, limit) == _naive_autocomplete(
+                idx, p, limit), (p, limit)
+
+
+def test_prefix_upper_bound_edges():
+    from repro.core.serving import _prefix_upper_bound
+    assert _prefix_upper_bound("") is None
+    assert _prefix_upper_bound("\U0010FFFF") is None
+    assert _prefix_upper_bound("a") == "b"
+    assert _prefix_upper_bound("az") == "a{"
+    # last char at the max: bump the previous one and truncate
+    assert _prefix_upper_bound("a\U0010FFFF") == "b"
+
+
+# -------------- warm-build before the latest-pointer swap -------------- #
+def test_invalidate_warm_builds_new_version_before_swap(engine, registry):
+    """The new version's index must be cache-resident BEFORE the latest
+    pointer moves, so the first post-publish query never pays the build."""
+    eng, ids = engine
+    eng.similarity("go", "transe", ids[0], ids[1])      # cache 2024-02
+    _publish(registry, "go", "2024-03", seed=3)
+
+    calls = []
+    orig = eng._index
+
+    def spy(ontology, model, version=None):
+        calls.append((ontology, model, version, eng.latest_version("go")))
+        return orig(ontology, model, version)
+
+    eng._index = spy
+    try:
+        eng.invalidate("go", "2024-03")
+    finally:
+        eng._index = orig
+    # warm-built while the pointer still said 2024-02
+    assert ("go", "transe", "2024-03", "2024-02") in calls
+    assert ("go", "transe", "2024-03") in eng.cache
+    # the first post-swap query is a pure cache hit
+    before = eng.cache.stats()["hits"]
+    eng.similarity("go", "transe", ids[0], ids[1])
+    assert eng.cache.stats()["hits"] == before + 1
+    assert eng.cache.stats()["misses"] == eng.cache.stats()["misses"]
+
+
+def test_invalidate_warm_build_tolerates_missing_model(engine, registry):
+    """A model absent from the new version must not break the swap."""
+    eng, ids = engine
+    eng.similarity("go", "transe", ids[0], ids[1])
+    # 2024-03 exists but has no transe snapshot (different model name)
+    rng = np.random.default_rng(9)
+    emb = rng.standard_normal((N, D)).astype(np.float32)
+    registry.publish("go", "2024-03", "distmult",
+                     [f"GO:{i:07d}" for i in range(N)],
+                     [f"go term {i}" for i in range(N)], emb,
+                     ontology_checksum="ck-3", hyperparameters={"dim": D})
+    eng.invalidate("go", "2024-03")
+    assert eng.latest_version("go") == "2024-03"
+    assert ("go", "transe", "2024-03") not in eng.cache
