@@ -1,0 +1,372 @@
+"""Result-cache + admission-control benchmark (PR 7 tentpole).
+
+Four measurements over one published snapshot:
+
+  * throughput — a Zipfian (s=1.1) mixed workload (60% closest-concepts,
+    25% sim, 15% get-vector) from 8 threaded clients through
+    ``gw.handle``, cache-on vs cache-off over the *same* engine. Real
+    query logs are heavy-tailed; under Zipf the hot head collapses onto
+    the version-keyed result cache and q/s must clear the floor.
+  * byte identity — cache-on responses are byte-for-byte the cache-off
+    gateway's across every cached route, including across a
+    publish→invalidate edge (the stale-hit impossibility, measured).
+  * burst — admission control under a 4x client spike: p99 of *accepted*
+    requests stays within ``BURST_P99_RATIO`` of the quiescent p99
+    (bounded intake means bounded queueing), and fast-rejects answer in
+    under ``REJECT_MEDIAN_MS`` median — the scheduler never does work
+    for a request it will not serve.
+  * http-429 — one saturated request over a real socket: status 429
+    with a Retry-After header, not a hang.
+
+Emits ``benchmarks/results/BENCH_cache.json``.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.bench_cache [--fast]
+
+Acceptance floors (PR 7): cache-on >= 5x cache-off q/s at full size
+(20k classes — each cache hit skips the scheduler round-trip and the
+top-k kernel entirely). At --fast CI size the floor is 2x: with a
+2k-class table the kernel is so cheap that dict-lookup savings shrink
+toward the fixed codec cost, so CI only catches "the cache stopped
+serving hits" regressions; full-size numbers are the trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import threading
+import time
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+import numpy as np
+
+REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO / "src"))
+
+RESULTS = REPO / "benchmarks" / "results"
+FLOOR = 5.0            # cache-on q/s vs cache-off, Zipf s=1.1, full size
+CI_FLOOR = 2.0         # --fast: tiny kernels shrink the per-hit savings
+ZIPF_S = 1.1
+BURST_P99_RATIO = 3.0  # accepted p99 under 4x burst vs quiescent p99
+REJECT_MEDIAN_MS = 5.0
+
+
+def _zipf_ranks(rng, n, size, s=ZIPF_S):
+    """``size`` ranks in [0, n) with P(rank i) ∝ (i+1)^-s."""
+    p = 1.0 / np.arange(1, n + 1) ** s
+    p /= p.sum()
+    return rng.choice(n, size=size, p=p)
+
+
+def _mixed_workload(rng, ids, total):
+    """The request sequence both gateways replay: Zipf-ranked queries
+    spread over a permuted id table so the hot head is not index-local."""
+    n = len(ids)
+    perm = rng.permutation(n)
+    ranks = _zipf_ranks(rng, n, 2 * total)
+    route_draw = rng.random(total)
+    reqs = []
+    for i in range(total):
+        q = ids[int(perm[ranks[2 * i]])]
+        if route_draw[i] < 0.60:
+            reqs.append(("/closest-concepts/go/transe",
+                         {"query": q, "k": 10}))
+        elif route_draw[i] < 0.85:
+            b = ids[int(perm[ranks[2 * i + 1]])]
+            reqs.append(("/sim/go/transe", {"a": q, "b": b}))
+        else:
+            reqs.append(("/get-vector/go/transe", {"query": q}))
+    return reqs
+
+
+def _fanout(gw, reqs, clients):
+    """Replay ``reqs`` across ``clients`` threads; (wall_s, latencies_s,
+    wires). Any error wire fails the measurement loudly."""
+    shards = [reqs[c::clients] for c in range(clients)]
+    lat, wires, failures, lock = [], {}, [], threading.Lock()
+    barrier = threading.Barrier(clients + 1)
+
+    def client(cix):
+        mine_lat, mine_wires = [], []
+        barrier.wait()
+        try:
+            for path, payload in shards[cix]:
+                t1 = time.perf_counter()
+                wire = gw.handle(path, dict(payload))
+                mine_lat.append(time.perf_counter() - t1)
+                if wire.get("type") == "error":
+                    raise RuntimeError(f"{path} -> {wire['code']}")
+                mine_wires.append(wire)
+        except Exception as e:
+            with lock:
+                failures.append(f"client {cix}: {e!r}")
+            return
+        with lock:
+            lat.extend(mine_lat)
+            wires[cix] = mine_wires
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(clients)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    assert not failures, failures
+    assert len(lat) == len(reqs), f"only {len(lat)}/{len(reqs)} completed"
+    return wall, lat, wires
+
+
+def _p(lat_s, q):
+    return round(float(np.percentile(np.asarray(lat_s) * 1e3, q)), 3)
+
+
+def run(fast: bool = False, clients: int = 8) -> dict:
+    from repro.api import Gateway, serve_http
+    from repro.core.registry import EmbeddingRegistry
+    from repro.core.serving import (BatchScheduler, ServingEngine,
+                                    SimRequest, TopKRequest)
+
+    n = 2_000 if fast else 20_000          # paper: GO > 40k classes
+    d, total = 200, (1_024 if fast else 4_096)
+    total = (total // clients) * clients
+    rng = np.random.default_rng(0)
+
+    with tempfile.TemporaryDirectory() as td:
+        registry = EmbeddingRegistry(td)
+        ids = [f"GO:{i:07d}" for i in range(n)]
+        labels = [f"synthetic term {i}" for i in range(n)]
+        emb = rng.standard_normal((n, d)).astype(np.float32)
+        registry.publish("go", "2025-01", "transe", ids, labels, emb,
+                         ontology_checksum="bench", hyperparameters={"dim": d})
+        engine = ServingEngine(registry)
+
+        # jit-warm every power-of-two bucket shape (top-k and sim) the
+        # burst can hit — a mid-burst compile would otherwise dominate
+        # the accepted p99 and measure XLA, not admission control
+        warm = BatchScheduler(engine, max_batch=64)
+        b = 1
+        while b <= 64:
+            for i in range(b):
+                warm.submit(TopKRequest("go", "transe", ids[i % n], k=10))
+            warm.flush()
+            for i in range(b):
+                warm.submit(SimRequest("go", "transe", ids[i % n],
+                                       ids[(i + 1) % n]))
+            warm.flush()
+            b <<= 1
+
+        reqs = _mixed_workload(rng, ids, total)
+
+        out = {"n_classes": n, "dim": d, "clients": clients,
+               "total_requests": total, "zipf_s": ZIPF_S}
+
+        # ---- throughput: cache-off vs cache-on, same workload --------- #
+        gw_off = Gateway(engine, flush_after_ms=2.0, result_cache_entries=0)
+        _fanout(gw_off, reqs, clients)                       # jit warmup
+        wall_off, lat_off, _ = _fanout(gw_off, reqs, clients)
+        qps_off = round(total / wall_off, 1)
+        print(f"  cache[off] {clients} clients x {total // clients}: "
+              f"{qps_off:>9,.0f} q/s  p50={_p(lat_off, 50):.3f}ms "
+              f"p99={_p(lat_off, 99):.3f}ms")
+
+        gw_on = Gateway(engine, flush_after_ms=2.0)
+        _fanout(gw_on, reqs, clients)          # populate: pass 1 misses
+        wall_on, lat_on, _ = _fanout(gw_on, reqs, clients)   # steady state
+        qps_on = round(total / wall_on, 1)
+        speedup = round(qps_on / qps_off, 2)
+        rc = gw_on.result_cache.stats()
+        print(f"  cache[on ] {clients} clients x {total // clients}: "
+              f"{qps_on:>9,.0f} q/s ({speedup:.2f}x)  "
+              f"p50={_p(lat_on, 50):.3f}ms p99={_p(lat_on, 99):.3f}ms  "
+              f"hit-rate={rc['hits'] / max(1, rc['hits'] + rc['misses']):.2f}")
+        out["throughput"] = {
+            "qps_off": qps_off, "qps_on": qps_on, "speedup": speedup,
+            "p99_off_ms": _p(lat_off, 99), "p99_on_ms": _p(lat_on, 99),
+            "cache": rc}
+
+        # ---- byte identity across routes + the invalidate edge -------- #
+        sample = reqs[:: max(1, total // 64)]
+        mismatches = 0
+        for path, payload in sample:
+            if json.dumps(gw_on.handle(path, dict(payload))) != \
+               json.dumps(gw_off.handle(path, dict(payload))):
+                mismatches += 1
+        # publish a new version and invalidate: unpinned traffic must
+        # flip to it — byte-identically to the cache-off gateway
+        emb2 = rng.standard_normal((n, d)).astype(np.float32)
+        registry.publish("go", "2025-02", "transe", ids, labels, emb2,
+                         ontology_checksum="bench2",
+                         hyperparameters={"dim": d})
+        engine.invalidate("go")
+        stale = 0
+        for path, payload in sample[:16]:
+            a = gw_on.handle(path, dict(payload))
+            b = gw_off.handle(path, dict(payload))
+            if json.dumps(a) != json.dumps(b):
+                mismatches += 1
+            if a.get("version") != "2025-02":
+                stale += 1
+        out["byte_identity"] = {"checked": len(sample) + 16,
+                                "mismatches": mismatches,
+                                "stale_after_invalidate": stale}
+        print(f"  identity   {out['byte_identity']['checked']} sampled wires: "
+              f"{mismatches} mismatches, {stale} stale after invalidate")
+        gw_on.close()
+        gw_off.close()
+
+        # ---- burst: bounded intake under a 4x client spike ------------ #
+        # quiescent and burst gateways share config (flush cadence,
+        # max_pending, no result cache — admission control is orthogonal
+        # to caching); only the client count changes
+        def burst_gw():
+            return Gateway(engine, flush_after_ms=10.0, max_pending=16,
+                           result_cache_entries=0)
+
+        q_reqs = _mixed_workload(rng, ids, total // 2)
+        gw_q = Gateway(engine, flush_after_ms=10.0, result_cache_entries=0)
+        _fanout(gw_q, q_reqs[: total // 8], max(1, clients // 2))  # warmup
+        _, lat_q, _ = _fanout(gw_q, q_reqs, max(1, clients // 2))
+        gw_q.close()
+        quiescent_p99 = _p(lat_q, 99)
+
+        gw_b = burst_gw()
+        b_clients = clients * 4
+        b_reqs = _mixed_workload(rng, ids, total)
+        shards = [b_reqs[c::b_clients] for c in range(b_clients)]
+        acc_lat, rej_lat, lock = [], [], threading.Lock()
+        barrier = threading.Barrier(b_clients)
+
+        def blast(cix):
+            mine_acc, mine_rej = [], []
+            barrier.wait()
+            for path, payload in shards[cix]:
+                t1 = time.perf_counter()
+                wire = gw_b.handle(path, dict(payload))
+                dt = time.perf_counter() - t1
+                if wire.get("type") == "error":
+                    assert wire["code"] == "OVERLOADED", wire
+                    mine_rej.append(dt)
+                else:
+                    mine_acc.append(dt)
+            with lock:
+                acc_lat.extend(mine_acc)
+                rej_lat.extend(mine_rej)
+
+        threads = [threading.Thread(target=blast, args=(i,))
+                   for i in range(b_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        gw_b.close()
+        burst_p99 = _p(acc_lat, 99) if acc_lat else float("inf")
+        rej_median = _p(rej_lat, 50) if rej_lat else None
+        ratio = round(burst_p99 / max(quiescent_p99, 1e-9), 2)
+        out["burst"] = {
+            "quiescent_clients": max(1, clients // 2),
+            "burst_clients": b_clients, "max_pending": 16,
+            "quiescent_p99_ms": quiescent_p99,
+            "accepted_p99_ms": burst_p99, "p99_ratio": ratio,
+            "accepted": len(acc_lat), "rejected": len(rej_lat),
+            "reject_median_ms": rej_median}
+        print(f"  burst      {b_clients} clients, max_pending=16: "
+              f"accepted p99={burst_p99:.3f}ms ({ratio:.2f}x quiescent "
+              f"{quiescent_p99:.3f}ms), {len(rej_lat)} rejects "
+              f"median={rej_median if rej_median is not None else 'n/a'}ms")
+
+        # ---- http-429 spot check: saturated socket answers, fast ------ #
+        gw_h = Gateway(engine, max_pending=1, flush_after_ms=60_000.0,
+                       result_cache_entries=0)
+        server = serve_http(gw_h, port=0)
+        try:
+            gw_h.scheduler.submit(                  # occupies the one slot
+                TopKRequest("go", "transe", ids[0], k=10))
+            t1 = time.perf_counter()
+            try:
+                urllib.request.urlopen(
+                    server.url +
+                    f"/closest-concepts/go/transe?query={ids[1]}&k=10",
+                    timeout=30)
+                http_429 = {"status": 200, "retry_after": None}
+            except urllib.error.HTTPError as e:
+                http_429 = {"status": e.code,
+                            "retry_after": e.headers.get("Retry-After"),
+                            "reject_ms": round(
+                                (time.perf_counter() - t1) * 1e3, 3)}
+                e.read()
+        finally:
+            server.close()
+            gw_h.close()
+        out["http_429"] = http_429
+        print(f"  http-429   status={http_429['status']} "
+              f"Retry-After={http_429.get('retry_after')}")
+
+        floor = CI_FLOOR if fast else FLOOR
+        out["floor"] = floor
+        out["pass"] = bool(
+            speedup >= floor
+            and mismatches == 0 and stale == 0
+            and ratio <= BURST_P99_RATIO
+            and len(rej_lat) > 0
+            and rej_median is not None and rej_median < REJECT_MEDIAN_MS
+            and http_429["status"] == 429
+            and http_429.get("retry_after") is not None)
+        return out
+
+
+def floor_speedup(report: dict) -> float:
+    return report.get("throughput", {}).get("speedup", 0.0)
+
+
+def section_key(fast: bool) -> str:
+    """Fast (CI-sized) runs record under their own key so they never
+    overwrite a full-sized trajectory with smaller-n numbers."""
+    return "cache_fast" if fast else "cache"
+
+
+def write_results(report: dict) -> Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out = RESULTS / "BENCH_cache.json"
+    merged = {}
+    if out.exists():
+        try:
+            merged = json.loads(out.read_text())
+        except json.JSONDecodeError:
+            merged = {}
+    merged.update(report)
+    out.write_text(json.dumps(merged, indent=2))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-sized table (2k classes instead of 20k)")
+    ap.add_argument("--clients", type=int, default=8)
+    args = ap.parse_args()
+
+    rep = run(fast=args.fast, clients=args.clients)
+    out = write_results({section_key(args.fast): rep})
+    print(f"[bench_cache] wrote {out}")
+
+    status = "PASS" if rep["pass"] else "FAIL"
+    print(f"[bench_cache] {status}: cache-on = "
+          f"{floor_speedup(rep):.2f}x cache-off q/s under Zipf "
+          f"s={ZIPF_S} (floor {rep['floor']}x); burst accepted p99 = "
+          f"{rep['burst']['p99_ratio']:.2f}x quiescent "
+          f"(<= {BURST_P99_RATIO}x); {rep['burst']['rejected']} rejects "
+          f"median {rep['burst']['reject_median_ms']}ms "
+          f"(< {REJECT_MEDIAN_MS}ms); http {rep['http_429']['status']}")
+    if not rep["pass"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

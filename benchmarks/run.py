@@ -43,6 +43,14 @@ corresponds to a system capability it claims:
                       cross-process publish->visible latency
                       (bench_http.py --workers), written to
                       results/BENCH_http_mp.json
+  B11 cache           version-keyed result cache + admission control:
+                      Zipf (s=1.1) mixed workload cache-on vs cache-off
+                      q/s (floor: 5x full / 2x fast), byte identity
+                      across the publish->invalidate edge, burst p99
+                      of accepted <= 3x quiescent, fast-reject median
+                      < 5ms, HTTP 429 + Retry-After spot check
+                      (benchmarks/bench_cache.py), written to
+                      results/BENCH_cache.json
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run                # full benchmarks
@@ -278,8 +286,13 @@ def run_smoke() -> int:
     gwy = bench_gateway.run(fast=True)
     bench_gateway.write_results(
         {bench_gateway.section_key(True) + "_smoke": gwy})
+    print("[smoke] cache bucket: Zipf result cache + admission control")
+    from benchmarks import bench_cache
+    cch = bench_cache.run(fast=True)
+    bench_cache.write_results(
+        {bench_cache.section_key(True) + "_smoke": cch})
     ok = (tests.returncode == 0 and s16 >= FLOOR and upd["pass"]
-          and gwy["pass"])
+          and gwy["pass"] and cch["pass"])
     print(f"[smoke] {'PASS' if ok else 'FAIL'}: tests "
           f"exit={tests.returncode}, 16-thread speedup={s16:.2f}x "
           f"(floor {FLOOR}x), warm update "
@@ -288,7 +301,9 @@ def run_smoke() -> int:
           f"{bench_update.quality_parity(upd)}), gateway "
           f"{bench_gateway.floor_speedup(gwy):.2f}x direct / async "
           f"{bench_gateway.async_ratio(gwy):.2f}x threaded "
-          f"(floors {bench_gateway.FLOOR}x / {bench_gateway.ASYNC_RATIO}x)")
+          f"(floors {bench_gateway.FLOOR}x / {bench_gateway.ASYNC_RATIO}x), "
+          f"cache {bench_cache.floor_speedup(cch):.2f}x "
+          f"(floor {cch['floor']}x)")
     return 0 if ok else 1
 
 
@@ -299,7 +314,8 @@ def main():
                          "(fast test tier + one scheduler bench bucket)")
     ap.add_argument("--only", default=None,
                     choices=["kge", "serving", "update", "walks", "sched",
-                             "concurrent", "gateway", "http", "http-mp"])
+                             "concurrent", "gateway", "http", "http-mp",
+                             "cache"])
     args = ap.parse_args()
 
     if args.fast and args.only is None:
@@ -357,6 +373,13 @@ def main():
             bench_http.write_results(
                 {bench_http.section_key(args.fast): htt})
             report["http"] = htt
+        if args.only in (None, "cache"):
+            print("[B11] result cache + admission control (Zipf s=1.1)")
+            from benchmarks import bench_cache
+            cch = bench_cache.run(fast=args.fast)
+            bench_cache.write_results(
+                {bench_cache.section_key(args.fast): cch})
+            report["cache"] = cch
         if args.only in (None, "http-mp"):
             print("[B10] multi-process HTTP serving (pre-fork pool, "
                   "shared mmap store)")

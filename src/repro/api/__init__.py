@@ -45,7 +45,8 @@ JSON bodies in, the same wire dicts out, ``ApiError.status`` as the
 response status, ETag/304 and chunked streaming on ``download``.
 """
 from .aio import AsyncGateway, ticket_future
-from .gateway import API_VERSION, Gateway, download_etag
+from .cache import ResultCache
+from .gateway import API_VERSION, CACHED_ROUTES, Gateway, download_etag
 from .http import GatewayHTTPServer, serve_http
 from .workers import StoreWatcher, WorkerPool, merge_stats_wires
 from .schema import (CODE_STATUS, ApiError, AutocompleteRequest,
@@ -59,6 +60,7 @@ from .schema import (CODE_STATUS, ApiError, AutocompleteRequest,
 
 __all__ = [
     "API_VERSION", "AsyncGateway", "Gateway", "ticket_future",
+    "ResultCache", "CACHED_ROUTES",
     "GatewayHTTPServer", "serve_http", "download_etag",
     "WorkerPool", "StoreWatcher", "merge_stats_wires",
     "CODE_STATUS", "ApiError", "from_wire", "payload_to", "to_wire",

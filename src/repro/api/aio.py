@@ -61,10 +61,22 @@ def ticket_future(ticket: Ticket,
                 fut.set_exception(outcome)
             else:
                 fut.set_result(outcome)
+        # shutdown race: the ticket may resolve (on the flush thread)
+        # after the client's event loop has already closed — e.g. a
+        # drain at interpreter exit, or a test tearing the loop down
+        # while a straggler flush lands. call_soon_threadsafe raises
+        # RuntimeError("Event loop is closed") then; without the guard
+        # that escapes into Ticket._fire_callbacks on the flush thread.
+        # The is_closed() pre-check skips the common case cheaply and
+        # the except covers the close-after-check race; the future is
+        # dead with its loop either way, so dropping the result is the
+        # only correct outcome.
+        if loop.is_closed():
+            return
         try:
             loop.call_soon_threadsafe(settle)
         except RuntimeError:
-            pass                                   # loop already closed
+            pass                                   # closed under our feet
 
     ticket.add_done_callback(on_done)
     return fut
@@ -101,33 +113,37 @@ class AsyncGateway:
         await asyncio.get_running_loop().run_in_executor(None, self.close)
 
     # ------------------- scheduler-routed (ticket) --------------------- #
-    async def _settle(self, ticket: Ticket):
+    async def _settle(self, ticket: Ticket,
+                      timeout: Optional[float] = None):
         loop = asyncio.get_running_loop()
         fut = ticket_future(ticket, loop)
+        if timeout is None:
+            timeout = self.gateway.timeout_s
 
         def expire() -> None:
             if not fut.done():
                 fut.set_exception(ApiError(
                     "TIMEOUT",
-                    f"request unresolved after {self.gateway.timeout_s}s",
+                    f"request unresolved after {timeout}s",
                     details={"ticket": ticket.id}))
 
         # a call_later timer instead of asyncio.wait_for: wait_for wraps
         # every await in an extra Task, which is measurable overhead at
         # micro-batch request rates (see bench_gateway)
-        timer = loop.call_later(self.gateway.timeout_s, expire)
+        timer = loop.call_later(timeout, expire)
         try:
             return await fut
         finally:
             timer.cancel()
 
-    async def _settle_counted(self, ticket: Ticket):
+    async def _settle_counted(self, ticket: Ticket,
+                              timeout: Optional[float] = None):
         """_settle + gateway error accounting: resolution-time failures
         happen outside the _run wrapper here (the submit returned before
         the ticket resolved), so count them explicitly — /stats must not
         undercount under async traffic."""
         try:
-            return await self._settle(ticket)
+            return await self._settle(ticket, timeout=timeout)
         except ApiError as e:
             self.gateway._count_error(e)
             raise
@@ -137,9 +153,14 @@ class AsyncGateway:
                          version: Optional[str] = None) -> SimilarityResponse:
         gw = self.gateway
         req = SimilarityRequest(ontology, model, a, b, fuzzy, version)
-        ticket = gw._run("sim", req, gw._submit_similarity)
-        return gw._similarity_response(req, ticket,
-                                       await self._settle_counted(ticket))
+        staged = gw._run("sim", req, gw._submit_similarity)
+        if isinstance(staged, SimilarityResponse):
+            return staged                      # result-cache hit at staging
+        score = await self._settle_counted(
+            staged, timeout=gw._route_budget("sim"))
+        resp = gw._similarity_response(req, staged, score)
+        gw._cache_store(gw._cache_key("sim", req), resp)
+        return resp
 
     async def closest_concepts(self, ontology: str, model: str, query: str, *,
                                k: int = 10, fuzzy: bool = False,
@@ -147,9 +168,14 @@ class AsyncGateway:
                                ) -> ClosestConceptsResponse:
         gw = self.gateway
         req = ClosestConceptsRequest(ontology, model, query, k, fuzzy, version)
-        ticket = gw._run("closest-concepts", req, gw._submit_closest)
-        return gw._closest_response(req, ticket,
-                                    await self._settle_counted(ticket))
+        staged = gw._run("closest-concepts", req, gw._submit_closest)
+        if isinstance(staged, ClosestConceptsResponse):
+            return staged                      # result-cache hit at staging
+        result = await self._settle_counted(
+            staged, timeout=gw._route_budget("closest-concepts"))
+        resp = gw._closest_response(req, staged, result)
+        gw._cache_store(gw._cache_key("closest-concepts", req), resp)
+        return resp
 
     # -------------------------- fan-out helpers ------------------------ #
     async def closest_concepts_many(

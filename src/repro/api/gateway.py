@@ -24,10 +24,22 @@ points:
   the engine; the updater's publish→invalidate evicts the cached
   versions/models metadata so ``versions``/``lineage`` reflect a new
   release immediately.
+* **version-keyed result cache** — ``sim`` / ``closest-concepts`` /
+  ``get-vector`` responses are deterministic per pinned snapshot
+  version, so they are cached whole (``repro.api.cache.ResultCache``,
+  bounded by entries and bytes) under a key that includes the
+  *resolved* version; the same invalidate listener purges an ontology's
+  entries on publish, so a new release can never serve stale bytes.
+* **admission control** — ``max_pending`` bounds scheduler intake
+  (fast ``OVERLOADED`` rejects instead of an unbounded backlog) and
+  per-route deadline budgets (``route_budgets``) let queued tickets
+  expire before burning kernel time once their client has given up.
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
+import json
 import threading
 import time
 from collections import Counter
@@ -36,6 +48,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from ..core.metrics import LatencyHistogram
 from ..core.serving import (BatchScheduler, SchedulerError, ServingEngine,
                             SimRequest, Ticket, TopKRequest)
+from .cache import ResultCache, canonical_payload
 from .schema import (ApiError, AutocompleteRequest, AutocompleteResponse,
                      ClosestConceptsRequest, ClosestConceptsResponse,
                      ConceptHit, DownloadPage, DownloadRequest,
@@ -51,6 +64,12 @@ API_VERSION = "v1"
 #: front end must provide a future-bridged implementation for each of
 #: these (AsyncGateway asserts coverage at construction)
 TICKET_ROUTES = ("sim", "closest-concepts")
+
+#: routes whose responses are pure functions of (resolved version,
+#: payload) — the only ones the result cache may serve. download is
+#: excluded (the HTTP layer already has ETag/304 + streaming for it),
+#: ops routes report live state.
+CACHED_ROUTES = ("sim", "closest-concepts", "get-vector")
 
 
 def download_etag(ontology: str, model: str, version: str,
@@ -117,13 +136,28 @@ class Gateway:
                  max_batch: int = 64,
                  flush_after_ms: Optional[float] = None,
                  timeout_s: float = 30.0,
-                 page_limit_max: int = 10_000):
+                 page_limit_max: int = 10_000,
+                 max_pending: Optional[int] = None,
+                 route_budgets: Optional[Dict[str, float]] = None,
+                 result_cache_entries: int = 4096,
+                 result_cache_bytes: int = 32 << 20):
         self.engine = engine
         self.scheduler = scheduler or BatchScheduler(
-            engine, max_batch=max_batch, flush_after_ms=flush_after_ms)
+            engine, max_batch=max_batch, flush_after_ms=flush_after_ms,
+            max_pending=max_pending, default_budget_s=timeout_s)
         self._owns_scheduler = scheduler is None
         self.timeout_s = timeout_s
         self.page_limit_max = page_limit_max
+        #: route name -> deadline budget in seconds; unlisted ticket
+        #: routes default to ``timeout_s`` (the client's own collect
+        #: timeout — once that fires nobody reads the answer anyway)
+        self.route_budgets: Dict[str, float] = dict(route_budgets or {})
+        #: whole-response cache for CACHED_ROUTES; None = disabled
+        #: (pass ``result_cache_entries=0``)
+        self.result_cache: Optional[ResultCache] = None
+        if result_cache_entries > 0 and result_cache_bytes > 0:
+            self.result_cache = ResultCache(result_cache_entries,
+                                            result_cache_bytes)
         self._closed = False
         self._meta_lock = threading.Lock()
         #: ("versions", ont) -> [versions]; ("models", ont, ver) -> [models]
@@ -177,11 +211,16 @@ class Gateway:
     # ------------------------ freshness hook --------------------------- #
     def _on_invalidate(self, ontology: str, version: Optional[str]) -> None:
         """Invalidate listener: a publish landed — evict this ontology's
-        cached versions/models so ops endpoints see it immediately."""
+        cached versions/models so ops endpoints see it immediately, and
+        purge its result-cache entries. (Version keying alone already
+        prevents stale hits — a new release resolves to a new version
+        and thus a new key — the eager purge just frees the capacity.)"""
         with self._meta_lock:
             self.counters["invalidations"] += 1
             for key in [k for k in self._meta_cache if k[1] == ontology]:
                 del self._meta_cache[key]
+        if self.result_cache is not None:
+            self.result_cache.invalidate_ontology(ontology)
 
     def _versions(self, ontology: str,
                   want: Optional[str] = None) -> List[str]:
@@ -243,26 +282,35 @@ class Gateway:
         return version
 
     # ---------------------- scheduler round trip ----------------------- #
-    def _collect_ticket(self, ticket: Ticket):
+    def _route_budget(self, route_key: str) -> float:
+        """Deadline budget for one ticket route (seconds): configured
+        ``route_budgets`` entry, else the gateway-wide ``timeout_s``."""
+        return float(self.route_budgets.get(route_key, self.timeout_s))
+
+    def _collect_ticket(self, ticket: Ticket,
+                        timeout: Optional[float] = None):
         """Block on an already-flushing ticket; translate failures."""
+        if timeout is None:
+            timeout = self.timeout_s
         try:
-            return ticket.result(timeout=self.timeout_s)
+            return ticket.result(timeout=timeout)
         except SchedulerError as e:
             raise _error_from_ticket(e) from None
         except TimeoutError:
             raise ApiError(
                 "TIMEOUT",
-                f"request unresolved after {self.timeout_s}s",
+                f"request unresolved after {timeout}s",
                 details={"ticket": ticket.id}) from None
 
-    def _await_ticket(self, ticket: Ticket):
+    def _await_ticket(self, ticket: Ticket,
+                      timeout: Optional[float] = None):
         """Block until the ticket resolves. Without a flush loop the
         gateway drives a synchronous flush itself (queues are popped
         under the scheduler lock, so coexisting callers/loops each
         resolve a ticket exactly once)."""
         if not self.scheduler.running():
             self.scheduler.flush()
-        return self._collect_ticket(ticket)
+        return self._collect_ticket(ticket, timeout=timeout)
 
     def _submit_similarity(self, req: SimilarityRequest) -> Ticket:
         self._check_open()
@@ -272,7 +320,8 @@ class Gateway:
                                        _opt_version(req.version))
         return self.scheduler.submit(SimRequest(
             req.ontology, req.model, req.a, req.b,
-            fuzzy=bool(req.fuzzy), version=version))
+            fuzzy=bool(req.fuzzy), version=version,
+            budget_s=self._route_budget("sim")))
 
     def _similarity_response(self, req: SimilarityRequest, ticket: Ticket,
                              score: float) -> SimilarityResponse:
@@ -288,7 +337,8 @@ class Gateway:
                                        _opt_version(req.version))
         return self.scheduler.submit(TopKRequest(
             req.ontology, req.model, req.query, req.k,
-            version=version, fuzzy=bool(req.fuzzy)))
+            version=version, fuzzy=bool(req.fuzzy),
+            budget_s=self._route_budget("closest-concepts")))
 
     def _closest_response(self, req: ClosestConceptsRequest, ticket: Ticket,
                           result) -> ClosestConceptsResponse:
@@ -301,14 +351,16 @@ class Gateway:
     # ---------------------------- handlers ----------------------------- #
     def _handle_similarity(self, req: SimilarityRequest) -> SimilarityResponse:
         ticket = self._submit_similarity(req)
-        return self._similarity_response(req, ticket,
-                                         self._await_ticket(ticket))
+        score = self._await_ticket(ticket,
+                                   timeout=self._route_budget("sim"))
+        return self._similarity_response(req, ticket, score)
 
     def _handle_closest(self,
                         req: ClosestConceptsRequest) -> ClosestConceptsResponse:
         ticket = self._submit_closest(req)
-        return self._closest_response(req, ticket,
-                                      self._await_ticket(ticket))
+        result = self._await_ticket(
+            ticket, timeout=self._route_budget("closest-concepts"))
+        return self._closest_response(req, ticket, result)
 
     def _handle_get_vector(self, req: GetVectorRequest) -> VectorResponse:
         self._check_open()
@@ -386,6 +438,8 @@ class Gateway:
                   "by_route": dict(self.counters["by_route"]),
                   "by_code": dict(self.counters["by_code"])}
             hists = dict(self.latency)
+        if self.result_cache is not None:
+            gw["result_cache"] = self.result_cache.stats()
         return StatsResponse(
             scheduler=sched, cache=self.engine.cache_stats(), gateway=gw,
             latency={route: h.snapshot()
@@ -466,9 +520,15 @@ class Gateway:
             if isinstance(t, ApiError):
                 out.append(t)
                 continue
+            if isinstance(t, ClosestConceptsResponse):
+                out.append(t)            # result-cache hit at staging time
+                continue
             try:
-                out.append(self._closest_response(req, t,
-                                                  self._collect_ticket(t)))
+                resp = self._closest_response(req, t,
+                                              self._collect_ticket(t))
+                self._cache_store(self._cache_key("closest-concepts", req),
+                                  resp)
+                out.append(resp)
             except ApiError as e:
                 self._count_error(e)
                 if not return_exceptions:
@@ -520,13 +580,60 @@ class Gateway:
                 h = self.latency.setdefault(route_key, LatencyHistogram())
         return h
 
+    # ------------------------- result cache ---------------------------- #
+    def _cache_key(self, route_key: str, req) -> Optional[Tuple]:
+        """Cache key for a request on a cacheable route, or None when the
+        request can't (or shouldn't) be cached. The key pins the
+        *resolved* version — a publish moves latest to a new version and
+        therefore a new key — and carries the payload as canonical JSON:
+        a raw field tuple would alias ``True`` with ``1`` (equal ints in
+        Python) and serve a cached hit for a payload the validator
+        rejects."""
+        if self.result_cache is None or route_key not in CACHED_ROUTES \
+                or self._closed:
+            return None
+        try:
+            version = self._resolve_coords(req.ontology, req.model,
+                                           _opt_version(req.version))
+        except ApiError:
+            return None        # let the handler classify and raise
+        payload = dataclasses.asdict(req)
+        # the resolved version already keys the entry: dropping the raw
+        # field folds ``version=None`` and an explicit pin of the same
+        # version onto one entry (their responses are identical bytes)
+        payload.pop("version", None)
+        canon = canonical_payload(payload)
+        if canon is None:
+            return None
+        return (route_key, req.ontology, req.model, version, canon)
+
+    def _cache_store(self, key: Optional[Tuple], resp) -> None:
+        if key is None or self.result_cache is None:
+            return
+        try:
+            nbytes = len(json.dumps(to_wire(resp)))
+        except (TypeError, ValueError):
+            return             # non-JSON response object: don't cache
+        self.result_cache.put(key, resp, nbytes)
+
     def _run(self, route_key: str, req, handler):
         with self._meta_lock:
             self.counters["requests"] += 1
             self.counters["by_route"][route_key] += 1
         t0 = time.perf_counter()
         try:
-            return handler(req)
+            key = self._cache_key(route_key, req)
+            if key is not None:
+                hit = self.result_cache.get(key)
+                if hit is not None:
+                    return hit
+            resp = handler(req)
+            # ticket-submitting handlers (the async front end, batch
+            # staging) return the Ticket itself — the caller stores the
+            # built response once it settles
+            if key is not None and not isinstance(resp, Ticket):
+                self._cache_store(key, resp)
+            return resp
         except ApiError as e:
             self._count_error(e)
             raise

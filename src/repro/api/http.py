@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import socket
 import threading
 import time
@@ -54,6 +55,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Callable, Dict, Optional, Tuple
 from urllib.parse import parse_qsl, urlsplit
 
+from ..core.metrics import LatencyHistogram
 from .gateway import API_VERSION, Gateway, download_etag
 from .schema import ApiError, DownloadRequest
 
@@ -310,16 +312,23 @@ class GatewayHTTPHandler(BaseHTTPRequestHandler):
                     return self._stream_download(gw, route_params, payload)
             match = (name, cls, _handler, route_params) if name else None
             wire = gw.handle(path, payload, match=match)
-            if wire.get("type") == "stats_response" \
-                    and self.server.stats_hook is not None:
-                # multi-process serving: the pool installs a hook that
-                # folds the sibling workers' counter/histogram snapshots
-                # into this worker's stats body (fixed-bucket histograms
-                # merge by adding counts)
-                try:
-                    wire = self.server.stats_hook(wire) or wire
-                except Exception:
-                    self.server._count("internal_errors")
+            if wire.get("type") == "stats_response":
+                if self.server.stats_hook is not None:
+                    # multi-process serving: the pool installs a hook that
+                    # folds the sibling workers' counter/histogram
+                    # snapshots into this worker's stats body
+                    # (fixed-bucket histograms merge by adding counts)
+                    try:
+                        wire = self.server.stats_hook(wire) or wire
+                    except Exception:
+                        self.server._count("internal_errors")
+                # transport-level block appended after any merge: 304s
+                # and streams are answered before dispatch, so without
+                # this they'd be invisible exactly when ETag traffic
+                # makes "cheap hit" the common case. In a worker pool
+                # this block is *this* worker's transport; the hook's
+                # ["workers"]["http"] block carries the pool-wide merge.
+                wire = {**wire, "http": self.server.http_snapshot()}
             status = wire.get("status", 200) if wire.get("type") == "error" \
                 else 200
             headers: Tuple[Tuple[str, str], ...] = ()
@@ -348,6 +357,7 @@ class GatewayHTTPHandler(BaseHTTPRequestHandler):
         produces the proper structured 4xx — ETags are computable by
         anyone, so a matching validator must never vouch for
         coordinates the gateway would reject."""
+        t0 = time.perf_counter()
         inm = self.headers.get("If-None-Match")
         if not inm or gw._closed:
             # a draining gateway must answer 503 everywhere — a 304 from
@@ -382,6 +392,10 @@ class GatewayHTTPHandler(BaseHTTPRequestHandler):
         if not _etag_matches(inm, etag):
             return False
         self.server._count("not_modified")
+        # 304s never reach Gateway._run, so they get their own transport
+        # histogram — otherwise the cheapest responses in the system
+        # would be the only ones with no latency record
+        self.server._observe_304(time.perf_counter() - t0)
         self.send_response(304)
         self.send_header("ETag", etag)
         self.end_headers()             # 304 carries no body by definition
@@ -483,8 +497,22 @@ class GatewayHTTPHandler(BaseHTTPRequestHandler):
         self.wfile.write(b"\r\n")
 
     # ----------------------------- replies ----------------------------- #
+    #: error codes whose responses advise the client when to come back
+    _RETRY_CODES = frozenset(("OVERLOADED", "SHUTTING_DOWN"))
+
     def _send_json(self, status: int, obj: Dict[str, Any],
                    headers: Tuple[Tuple[str, str], ...] = ()) -> None:
+        if obj.get("type") == "error" and obj.get("code") in self._RETRY_CODES:
+            # 429/503 carry Retry-After (RFC 6585 / RFC 9110): the
+            # scheduler's reject details hold a sub-second hint derived
+            # from the flush cadence; the header is whole seconds, so
+            # round up and never advise less than 1
+            retry = (obj.get("details") or {}).get("retry_after_s")
+            try:
+                secs = max(1, math.ceil(float(retry)))
+            except (TypeError, ValueError):
+                secs = 1
+            headers = (*headers, ("Retry-After", str(secs)))
         body = json.dumps(obj).encode("utf-8")
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
@@ -553,6 +581,10 @@ class GatewayHTTPServer(ThreadingHTTPServer):
         self.http_stats: Dict[str, int] = {
             "requests": 0, "not_modified": 0, "streams": 0,
             "internal_errors": 0, "max_chunk_bytes": 0}
+        #: pre-dispatch 304 answer latency — these requests never reach
+        #: the gateway's per-route histograms (satellite of the result
+        #: cache work: cheap hits must still be observable)
+        self.not_modified_latency = LatencyHistogram()
         self._thread: Optional[threading.Thread] = None
         #: set while serve_forever is on some thread's stack — close()
         #: must not call shutdown() otherwise (BaseServer.shutdown waits
@@ -576,6 +608,19 @@ class GatewayHTTPServer(ThreadingHTTPServer):
         with self._stats_lock:
             if nbytes > self.http_stats["max_chunk_bytes"]:
                 self.http_stats["max_chunk_bytes"] = nbytes
+
+    def _observe_304(self, seconds: float) -> None:
+        self.not_modified_latency.observe(seconds)
+
+    def http_snapshot(self) -> Dict[str, Any]:
+        """Transport counters + 304 latency for /stats bodies (and the
+        worker-pool state dumps — histograms merge across workers via
+        ``LatencyHistogram.merge_snapshots``, never by naive dict-add)."""
+        with self._stats_lock:
+            counts = dict(self.http_stats)
+        counts["latency_ms"] = {
+            "not_modified": self.not_modified_latency.snapshot()}
+        return counts
 
     # ---------------------------- lifecycle ---------------------------- #
     @property

@@ -32,6 +32,7 @@ CODE_STATUS: Dict[str, int] = {
     "NOT_FOUND": 404,                # unknown *route* — not a bad payload
     "BAD_REQUEST": 400,
     "TIMEOUT": 408,
+    "OVERLOADED": 429,               # admission control: intake bound hit
     "SHUTTING_DOWN": 503,
     "INTERNAL": 500,
 }
@@ -43,6 +44,7 @@ _LEGACY = {
     "UNKNOWN_VERSION": KeyError, "UNKNOWN_CLASS": KeyError,
     "NOT_FOUND": KeyError,
     "BAD_REQUEST": ValueError, "TIMEOUT": TimeoutError,
+    "OVERLOADED": RuntimeError,
     "SHUTTING_DOWN": RuntimeError, "INTERNAL": RuntimeError,
 }
 

@@ -250,7 +250,10 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
                  state_dir: Path, *, inherited: Optional[socket.socket],
                  max_batch: int, flush_after_ms: float,
                  cache_capacity: int, watch_interval_s: float,
-                 stats_interval_s: float) -> None:
+                 stats_interval_s: float,
+                 max_pending: Optional[int] = None,
+                 result_cache_entries: int = 4096,
+                 result_cache_bytes: int = 32 << 20) -> None:
     """Body of one worker process (runs post-fork; exits via os._exit).
 
     Builds the full serving stack from scratch — registry, engine,
@@ -267,7 +270,10 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
 
     registry = EmbeddingRegistry(registry_root)
     engine = ServingEngine(registry, cache_capacity=cache_capacity)
-    gw = Gateway(engine, max_batch=max_batch, flush_after_ms=flush_after_ms)
+    gw = Gateway(engine, max_batch=max_batch, flush_after_ms=flush_after_ms,
+                 max_pending=max_pending,
+                 result_cache_entries=result_cache_entries,
+                 result_cache_bytes=result_cache_bytes)
 
     if inherited is not None:
         sock = inherited                      # fallback: contended accept
@@ -282,6 +288,16 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
         _merge_counter_dicts(http_counts, dict(server.http_stats))
         for s in siblings:
             _merge_counter_dicts(http_counts, s.get("http") or {})
+        # 304 latency histograms merge by bucket-adding snapshots —
+        # explicitly, never through _merge_counter_dicts (it would keep
+        # the first worker's bucket list and drop the rest)
+        nm_snaps = [server.not_modified_latency.snapshot()]
+        for s in siblings:
+            snap = (s.get("http_latency") or {}).get("not_modified")
+            if snap:
+                nm_snaps.append(snap)
+        http_counts["latency_ms"] = {
+            "not_modified": LatencyHistogram.merge_snapshots(nm_snaps)}
         sup: Dict[str, Any] = {}
         try:
             sup = json.loads((state_dir / _SUPERVISOR_STATE).read_text())
@@ -308,6 +324,8 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
             "idx": idx, "pid": os.getpid(), "port": server.port,
             "ts": time.time(), "adoptions": watcher.adoptions,
             "http": dict(server.http_stats),
+            "http_latency": {
+                "not_modified": server.not_modified_latency.snapshot()},
             "stats": to_wire(gw._handle_stats(StatsRequest())),
         })
 
@@ -379,6 +397,9 @@ class WorkerPool:
                  host: str = "127.0.0.1", workers: int = 2, *,
                  max_batch: int = 64, flush_after_ms: float = 2.0,
                  cache_capacity: int = 8,
+                 max_pending: Optional[int] = None,
+                 result_cache_entries: int = 4096,
+                 result_cache_bytes: int = 32 << 20,
                  state_dir: Optional[str | Path] = None,
                  use_reuseport: Optional[bool] = None,
                  watch_interval_s: float = 0.25,
@@ -394,6 +415,9 @@ class WorkerPool:
         self.max_batch = max_batch
         self.flush_after_ms = flush_after_ms
         self.cache_capacity = cache_capacity
+        self.max_pending = max_pending
+        self.result_cache_entries = result_cache_entries
+        self.result_cache_bytes = result_cache_bytes
         self.restart = restart
         self.watch_interval_s = watch_interval_s
         self.stats_interval_s = stats_interval_s
@@ -469,7 +493,10 @@ class WorkerPool:
                     flush_after_ms=self.flush_after_ms,
                     cache_capacity=self.cache_capacity,
                     watch_interval_s=self.watch_interval_s,
-                    stats_interval_s=self.stats_interval_s)
+                    stats_interval_s=self.stats_interval_s,
+                    max_pending=self.max_pending,
+                    result_cache_entries=self.result_cache_entries,
+                    result_cache_bytes=self.result_cache_bytes)
             finally:
                 # _worker_main exits via its own os._exit(0); reaching
                 # here means it raised before serving
@@ -597,6 +624,13 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--state-dir", default=None)
     ap.add_argument("--watch-interval-ms", type=float, default=250.0)
     ap.add_argument("--stats-interval-ms", type=float, default=500.0)
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="per-worker scheduler intake bound; past it "
+                         "submissions fast-reject with HTTP 429")
+    ap.add_argument("--cache-entries", type=int, default=4096,
+                    help="result-cache entry bound per worker (0 disables)")
+    ap.add_argument("--cache-bytes", type=int, default=32 << 20,
+                    help="result-cache byte bound per worker (0 disables)")
     ap.add_argument("--no-reuseport", action="store_true",
                     help="force the inherited-listener fallback")
     args = ap.parse_args(argv)
@@ -604,6 +638,9 @@ def main(argv: Optional[List[str]] = None) -> None:
     pool = WorkerPool(
         args.registry, port=args.port, host=args.host, workers=args.workers,
         max_batch=args.max_batch, flush_after_ms=args.flush_after_ms,
+        max_pending=args.max_pending,
+        result_cache_entries=args.cache_entries,
+        result_cache_bytes=args.cache_bytes,
         state_dir=args.state_dir,
         use_reuseport=False if args.no_reuseport else None,
         watch_interval_s=args.watch_interval_ms / 1e3,

@@ -597,6 +597,10 @@ class TopKRequest:
     k: int = 10
     version: Optional[str] = None    # None = pin to latest at submit time
     fuzzy: bool = False              # typo-tolerant query resolution
+    #: per-request deadline budget in seconds (None = no deadline). A
+    #: ticket still queued past submit+budget is rejected at flush time
+    #: *before* any kernel work — its client already gave up.
+    budget_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -611,6 +615,7 @@ class SimRequest:
     b: str
     fuzzy: bool = False
     version: Optional[str] = None
+    budget_s: Optional[float] = None  # same semantics as TopKRequest
 
 
 #: queue-key slot marking pair-similarity queues (top-k queues use their
@@ -654,8 +659,9 @@ class Ticket:
     directly as keys.
     """
 
-    __slots__ = ("id", "version", "created", "_event", "_result", "_error",
-                 "_error_code", "_error_details", "_cb_lock", "_callbacks")
+    __slots__ = ("id", "version", "created", "deadline", "_event", "_result",
+                 "_error", "_error_code", "_error_details", "_cb_lock",
+                 "_callbacks")
 
     def __init__(self, tid: int, version: Optional[str] = None):
         self.id = tid
@@ -665,6 +671,9 @@ class Ticket:
         #: monotonic submit timestamp — the anchor for the scheduler's
         #: submit->resolve latency histogram
         self.created = time.monotonic()
+        #: absolute monotonic deadline (None = no budget): past it the
+        #: flush loop rejects instead of executing — see TopKRequest.budget_s
+        self.deadline: Optional[float] = None
         self._event = threading.Event()
         self._result = None          # List[ClosestConcept] or float (sim)
         self._error: Optional[str] = None
@@ -805,12 +814,27 @@ class BatchScheduler:
 
     def __init__(self, engine: ServingEngine, max_batch: int = 64,
                  max_errors: int = 1024,
-                 flush_after_ms: Optional[float] = None):
+                 flush_after_ms: Optional[float] = None,
+                 max_pending: Optional[int] = None,
+                 default_budget_s: Optional[float] = None,
+                 overload_retry_after_s: Optional[float] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if flush_after_ms is not None and flush_after_ms < 0:
             raise ValueError(f"flush_after_ms must be >= 0, got {flush_after_ms}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.engine = engine
+        #: admission control: once this many tickets are queued, further
+        #: submits are fast-rejected with code OVERLOADED instead of
+        #: growing the backlog without bound (None = unbounded intake)
+        self.max_pending = max_pending
+        #: deadline budget applied when the request carries none
+        self.default_budget_s = default_budget_s
+        #: retry hint attached to OVERLOADED rejects; default derives from
+        #: the flush cadence (a couple of flush periods usually clears a
+        #: bounded backlog)
+        self.overload_retry_after_s = overload_retry_after_s
         # buckets are powers of two capped at the caller's exact max_batch
         # (the cap bounds kernel batch memory; a non-power-of-two max_batch
         # costs at most one extra jitted shape for full batches)
@@ -835,7 +859,14 @@ class BatchScheduler:
         self.stats = {"submitted": 0, "resolved": 0, "flushes": 0,
                       "loop_flushes": 0, "deadline_flushes": 0,
                       "full_flushes": 0, "batches": 0, "sim_batches": 0,
-                      "padded_queries": 0, "failed": 0}
+                      "padded_queries": 0, "failed": 0,
+                      # admission control / deadline accounting:
+                      # rejected_overloaded = fast-rejects at intake,
+                      # expired = deadline passed while queued (rejected at
+                      # flush, zero kernel work), skipped_resolved = already
+                      # resolved when the flush reached them (also skipped)
+                      "rejected_overloaded": 0, "expired": 0,
+                      "skipped_resolved": 0}
         if flush_after_ms is not None:
             self.start()
 
@@ -867,6 +898,22 @@ class BatchScheduler:
         with self._lock:
             tid = next(self._tickets)
             self.stats["submitted"] += 1
+            # admission control *before* any registry/index work: rejecting
+            # must stay cheap precisely when the scheduler is busiest
+            if self.max_pending is not None and \
+                    sum(len(v) for v in self._queues.values()) \
+                    >= self.max_pending:
+                self.stats["rejected_overloaded"] += 1
+                overloaded = True
+            else:
+                overloaded = False
+        if overloaded:
+            return self._reject_at_submit(
+                Ticket(tid),
+                f"scheduler at capacity ({self.max_pending} pending)",
+                "OVERLOADED",
+                {"max_pending": self.max_pending,
+                 "retry_after_s": self._retry_after_s()})
         try:
             version = req.version or self.engine.latest_version(req.ontology)
         except Exception as e:
@@ -877,6 +924,11 @@ class BatchScheduler:
                 Ticket(tid), str(e), code,
                 {"ontology": req.ontology} if code else None)
         ticket = Ticket(tid, version=version)
+        budget = getattr(req, "budget_s", None)
+        if budget is None:
+            budget = self.default_budget_s
+        if budget is not None:
+            ticket.deadline = ticket.created + budget
         if isinstance(req, SimRequest):
             key = (req.ontology, req.model, version, _SIM_K)
         else:
@@ -909,6 +961,13 @@ class BatchScheduler:
                                           "SHUTTING_DOWN")
         return ticket
 
+    def _retry_after_s(self) -> float:
+        """Retry hint for OVERLOADED rejects: the configured value, else a
+        couple of flush periods (a bounded backlog clears in about one)."""
+        if self.overload_retry_after_s is not None:
+            return float(self.overload_retry_after_s)
+        return max(0.05, 2.0 * (self.flush_after_ms or 50.0) / 1e3)
+
     def accepting(self) -> bool:
         """False once stop() has closed intake (start() re-opens it)."""
         with self._lock:
@@ -930,6 +989,7 @@ class BatchScheduler:
         results: Dict[int, List[ClosestConcept]] = {}
         errors: Dict[int, str] = {}
         n_batches = n_padded = n_resolved = n_sim = 0
+        n_expired = n_skipped = 0
 
         def reject(ticket: Ticket, msg: str, code: Optional[str] = None,
                    details: Optional[Dict] = None) -> None:
@@ -940,6 +1000,27 @@ class BatchScheduler:
                 self._observe_latency(ticket)
 
         for (ont, model, version, k), items in queues.items():
+            # drop dead weight *before* index build or kernel work: tickets
+            # already resolved elsewhere, and tickets whose deadline budget
+            # expired while queued — their clients have already received
+            # TIMEOUT (e.g. the AsyncGateway call_later expiry), so
+            # executing them would burn kernel time on answers nobody reads
+            now = time.monotonic()
+            fresh: List[Tuple[Ticket, TopKRequest]] = []
+            for ticket, req in items:
+                if ticket.done():
+                    n_skipped += 1
+                elif ticket.deadline is not None and now >= ticket.deadline:
+                    n_expired += 1
+                    reject(ticket,
+                           f"deadline budget exhausted after "
+                           f"{now - ticket.created:.3f}s in queue", "TIMEOUT",
+                           {"queued_s": now - ticket.created})
+                else:
+                    fresh.append((ticket, req))
+            items = fresh
+            if not items:
+                continue
             # a broken queue (unpublished model, bad version, k < 1) fails
             # only its own tickets — other queues in this flush still serve
             try:
@@ -1037,6 +1118,8 @@ class BatchScheduler:
             self.stats["sim_batches"] += n_sim
             self.stats["padded_queries"] += n_padded
             self.stats["resolved"] += n_resolved
+            self.stats["expired"] += n_expired
+            self.stats["skipped_resolved"] += n_skipped
         return results
 
     def _drain(self, queues, collect: bool = True

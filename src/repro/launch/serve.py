@@ -58,6 +58,16 @@ def main():
                          "processes (SO_REUSEPORT) over the shared "
                          "mmap-resident snapshot store; 1 = classic "
                          "single-process serving")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="scheduler intake bound (per worker); past it "
+                         "submissions fast-reject with OVERLOADED / "
+                         "HTTP 429 + Retry-After instead of queueing "
+                         "without bound")
+    ap.add_argument("--cache-entries", type=int, default=4096,
+                    help="version-keyed result-cache entry bound "
+                         "(0 disables the cache)")
+    ap.add_argument("--cache-bytes", type=int, default=32 << 20,
+                    help="result-cache wire-byte bound (0 disables)")
     args = ap.parse_args()
 
     from repro.api import Gateway
@@ -91,7 +101,10 @@ def main():
         from repro.api.workers import WorkerPool
         pool = WorkerPool(args.registry, port=args.http, host=args.host,
                           workers=args.workers, max_batch=args.batch,
-                          flush_after_ms=args.flush_after_ms)
+                          flush_after_ms=args.flush_after_ms,
+                          max_pending=args.max_pending,
+                          result_cache_entries=args.cache_entries,
+                          result_cache_bytes=args.cache_bytes)
         pool.start()
         pool.wait_ready()
         base = pool.url
@@ -103,7 +116,6 @@ def main():
               f"{args.model}?query=GO:0000001&k=5'")
         print(f"[serve]   curl '{base}/stats'   # merged across workers")
         try:
-            import threading
             threading.Event().wait()
         except KeyboardInterrupt:
             print("\n[serve] shutting down worker pool")
@@ -114,7 +126,10 @@ def main():
     mesh = None if args.no_shard else make_serving_mesh()
     engine = ServingEngine(registry, mesh=mesh)
     gw = Gateway(engine, max_batch=args.batch,
-                 flush_after_ms=args.flush_after_ms)
+                 flush_after_ms=args.flush_after_ms,
+                 max_pending=args.max_pending,
+                 result_cache_entries=args.cache_entries,
+                 result_cache_bytes=args.cache_bytes)
 
     if args.http is not None:
         from repro.api.http import serve_http

@@ -80,7 +80,7 @@ def test_every_code_has_status_and_legacy_mapping():
     assert set(schema.CODE_STATUS) == {
         "UNKNOWN_ONTOLOGY", "UNKNOWN_MODEL", "UNKNOWN_VERSION",
         "UNKNOWN_CLASS", "NOT_FOUND", "BAD_REQUEST", "TIMEOUT",
-        "SHUTTING_DOWN", "INTERNAL"}
+        "OVERLOADED", "SHUTTING_DOWN", "INTERNAL"}
     for code in schema.CODE_STATUS:
         err = ApiError(code, "m")
         assert err.status == schema.CODE_STATUS[code]
@@ -91,6 +91,8 @@ def test_every_code_has_status_and_legacy_mapping():
     assert isinstance(ApiError("BAD_REQUEST", "m").legacy(), ValueError)
     assert isinstance(ApiError("TIMEOUT", "m").legacy(), TimeoutError)
     assert isinstance(ApiError("SHUTTING_DOWN", "m").legacy(), RuntimeError)
+    assert isinstance(ApiError("OVERLOADED", "m").legacy(), RuntimeError)
+    assert ApiError("OVERLOADED", "m").status == 429
     with pytest.raises(ValueError):
         ApiError("NO_SUCH_CODE", "m")
 

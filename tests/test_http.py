@@ -445,7 +445,10 @@ def test_keep_alive_serves_many_requests_per_connection(served):
 def test_concurrent_http_clients_share_one_scheduler(registry):
     ids = _publish(registry, "go", "2024-01", seed=1)
     engine = ServingEngine(registry)
-    gateway = Gateway(engine, flush_after_ms=2.0)     # real flush loop
+    # result cache off: this test counts scheduler submissions, and the
+    # client index pattern repeats queries — a cache hit wouldn't submit
+    gateway = Gateway(engine, flush_after_ms=2.0,     # real flush loop
+                      result_cache_entries=0)
     server = serve_http(gateway, port=0)
     n_clients, per = 8, 6
     failures = []

@@ -1,0 +1,212 @@
+"""Admission control and the burst-path bugfix sweep (PR 7): bounded
+scheduler intake fast-rejecting with OVERLOADED, HTTP 429 + Retry-After
+instead of a hang, deadline budgets rejecting expired tickets before
+kernel work, flush-time skip of already-resolved tickets, the aio
+ticket bridge surviving a closed event loop, and 304s landing in
+transport stats with latency. Fast tier — snapshots are published
+directly."""
+import asyncio
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import Gateway, serve_http, ticket_future
+from repro.core.serving import (BatchScheduler, SchedulerError, ServingEngine,
+                                TopKRequest)
+
+N, D = 40, 12
+
+
+def _publish(registry, ontology, version, model="transe", n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = [f"{ontology.upper()}:{i:07d}" for i in range(n)]
+    labels = [f"{ontology} term {i}" for i in range(n)]
+    emb = rng.standard_normal((n, D)).astype(np.float32)
+    registry.publish(ontology, version, model, ids, labels, emb,
+                     ontology_checksum=f"ck-{version}-{seed}",
+                     hyperparameters={"dim": D})
+    return ids
+
+
+@pytest.fixture()
+def engine(registry):
+    ids = _publish(registry, "go", "2024-01", seed=1)
+    return ServingEngine(registry, cache_capacity=4), ids
+
+
+# ----------------------- scheduler admission -------------------------- #
+def test_max_pending_fast_rejects_with_overloaded(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_pending=2)      # no flush loop
+    t1 = sched.submit(TopKRequest("go", "transe", ids[0], k=3))
+    t2 = sched.submit(TopKRequest("go", "transe", ids[1], k=3))
+    t3 = sched.submit(TopKRequest("go", "transe", ids[2], k=3))
+    assert t3.done() and not t1.done() and not t2.done()
+    with pytest.raises(SchedulerError) as ei:
+        t3.result(timeout=0)
+    assert ei.value.code == "OVERLOADED"
+    assert ei.value.details["max_pending"] == 2
+    assert ei.value.details["retry_after_s"] > 0
+    assert sched.stats["rejected_overloaded"] == 1
+    # capacity frees after a flush; intake accepts again
+    sched.flush()
+    assert t1.result(timeout=1) and t2.result(timeout=1)
+    t4 = sched.submit(TopKRequest("go", "transe", ids[3], k=3))
+    sched.flush()
+    assert t4.result(timeout=1)
+    # every accepted ticket resolved; the fast-reject never enters queues
+    assert sched.stats["resolved"] == sched.stats["submitted"]
+
+
+def test_max_pending_validated():
+    with pytest.raises(ValueError):
+        BatchScheduler(object(), max_pending=0)
+
+
+def test_deadline_budget_rejects_expired_before_kernel_work(engine):
+    """Satellite 1: a ticket queued past submit+budget is rejected at
+    flush time *before* the index build — zero batches run when every
+    queued ticket has expired."""
+    eng, ids = engine
+    sched = BatchScheduler(eng, max_batch=8)
+    t = sched.submit(TopKRequest("go", "transe", ids[0], k=3,
+                                 budget_s=0.01))
+    assert t.deadline is not None
+    time.sleep(0.05)
+    sched.flush()
+    with pytest.raises(SchedulerError) as ei:
+        t.result(timeout=0)
+    assert ei.value.code == "TIMEOUT"
+    assert ei.value.details["queued_s"] >= 0.01
+    assert sched.stats["expired"] == 1
+    assert sched.stats["batches"] == 0          # no kernel work happened
+    assert sched.stats["resolved"] == sched.stats["submitted"]
+
+
+def test_default_budget_applies_when_request_has_none(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng, default_budget_s=0.01)
+    t = sched.submit(TopKRequest("go", "transe", ids[0], k=3))
+    assert t.deadline == pytest.approx(t.created + 0.01)
+    time.sleep(0.05)
+    sched.flush()
+    with pytest.raises(SchedulerError):
+        t.result(timeout=0)
+    assert sched.stats["expired"] == 1
+
+
+def test_flush_skips_already_resolved_tickets(engine):
+    """Satellite 1: a ticket resolved externally (e.g. a client-side
+    cancel) between submit and flush is silently dropped from the batch
+    instead of being double-resolved or batched for nothing."""
+    eng, ids = engine
+    sched = BatchScheduler(eng)
+    t = sched.submit(TopKRequest("go", "transe", ids[0], k=3))
+    t._resolve("cancelled-by-client")
+    sched.flush()
+    assert sched.stats["skipped_resolved"] == 1
+    assert sched.stats["batches"] == 0
+    assert t.result(timeout=0) == "cancelled-by-client"   # untouched
+
+
+# --------------------------- wire-level 429 ---------------------------- #
+def test_saturated_scheduler_returns_429_with_retry_after(engine):
+    """Satellite 4: a saturated scheduler must answer over HTTP with 429
+    + Retry-After — quickly — not hang the connection until timeout."""
+    import urllib.error
+    import urllib.request
+    eng, ids = engine
+    # flush loop running but glacial: the pre-filled ticket below holds
+    # the single max_pending slot for the whole test
+    gateway = Gateway(eng, max_pending=1, flush_after_ms=60_000,
+                      result_cache_entries=0)
+    server = serve_http(gateway, port=0)
+    try:
+        gateway.scheduler.submit(
+            TopKRequest("go", "transe", ids[0], k=3))   # occupies the slot
+        t0 = time.perf_counter()
+        req = urllib.request.Request(
+            server.url + f"/closest-concepts/go/transe?query={ids[1]}&k=3")
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(req, timeout=30)
+        elapsed = time.perf_counter() - t0
+        err = ei.value
+        assert err.code == 429
+        assert int(err.headers["Retry-After"]) >= 1
+        body = json.loads(err.read())
+        assert body["code"] == "OVERLOADED" and body["status"] == 429
+        assert body["details"]["retry_after_s"] > 0
+        assert elapsed < 5.0                    # fast-reject, not a hang
+        # rejected requests count exactly once in errors_by_code
+        assert gateway.counters["by_code"]["OVERLOADED"] == 1
+        assert gateway.counters["errors"] == 1
+        assert gateway.scheduler.stats["rejected_overloaded"] == 1
+        wire = gateway.handle("/stats", {})   # /stats itself never submits
+        assert wire["gateway"]["by_code"]["OVERLOADED"] == 1
+    finally:
+        server.close()
+        gateway.close()
+
+
+# ------------------------ aio shutdown race ---------------------------- #
+def test_ticket_future_survives_loop_closed_before_resolution(engine):
+    """Satellite 2: the flush thread resolving a ticket whose awaiting
+    event loop has already closed must not blow up the flush loop."""
+    eng, ids = engine
+    sched = BatchScheduler(eng)
+    t = sched.submit(TopKRequest("go", "transe", ids[0], k=3))
+    loop = asyncio.new_event_loop()
+    fut = ticket_future(t, loop)
+    loop.close()                     # client went away mid-flight
+    sched.flush()                    # fires on_done against the dead loop
+    assert t.done() and t.result(timeout=0)
+    assert not fut.done()            # never settled — but nothing raised
+    assert sched.stats["resolved"] == sched.stats["submitted"]
+
+
+def test_ticket_future_still_settles_on_live_loop(engine):
+    eng, ids = engine
+    sched = BatchScheduler(eng)
+
+    async def run():
+        t = sched.submit(TopKRequest("go", "transe", ids[0], k=3))
+        fut = ticket_future(t)
+        await asyncio.get_running_loop().run_in_executor(None, sched.flush)
+        return await fut
+
+    hits = asyncio.run(run())
+    assert len(hits) == 3
+
+
+# ------------------------- 304 observability --------------------------- #
+def test_not_modified_counts_and_latency_in_http_stats(registry):
+    """Satellite 3: conditional-GET 304s are answered before dispatch;
+    they must still show up in transport-level /stats with latency."""
+    import urllib.request
+    ids = _publish(registry, "go", "2024-01", seed=1)
+    eng = ServingEngine(registry, cache_capacity=4)
+    gateway = Gateway(eng)
+    server = serve_http(gateway, port=0)
+    try:
+        path = "/download/go/transe?limit=3"
+        with urllib.request.urlopen(server.url + path, timeout=30) as r:
+            etag = r.headers["ETag"]
+        import http.client
+        host = server.server_address[0]
+        conn = http.client.HTTPConnection(host, server.port, timeout=30)
+        conn.request("GET", path, headers={"If-None-Match": etag})
+        resp = conn.getresponse()
+        resp.read()
+        assert resp.status == 304
+        conn.close()
+        with urllib.request.urlopen(server.url + "/stats", timeout=30) as r:
+            body = json.loads(r.read())
+        http_stats = body["http"]
+        assert http_stats["not_modified"] == 1
+        lat = http_stats["latency_ms"]["not_modified"]
+        assert lat["count"] == 1 and lat["p50_ms"] >= 0
+    finally:
+        server.close()
+        gateway.close()

@@ -1,0 +1,212 @@
+"""Version-keyed result cache (PR 7 tentpole): LFU/LRU bounds, the
+gateway hit path serving byte-identical responses on every cached
+route, bool/int key canonicalisation, and the publish→invalidate edge
+never serving stale bytes. Snapshots are published directly — fast
+tier."""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import AsyncGateway, Gateway, ResultCache
+from repro.api.gateway import CACHED_ROUTES
+from repro.core.serving import ServingEngine
+
+N, D = 40, 12
+
+
+def _publish(registry, ontology, version, model="transe", n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    ids = [f"{ontology.upper()}:{i:07d}" for i in range(n)]
+    labels = [f"{ontology} term {i}" for i in range(n)]
+    emb = rng.standard_normal((n, D)).astype(np.float32)
+    registry.publish(ontology, version, model, ids, labels, emb,
+                     ontology_checksum=f"ck-{version}-{seed}",
+                     hyperparameters={"dim": D})
+    return ids
+
+
+@pytest.fixture()
+def pair(registry):
+    """(cached gateway, cache-off gateway, engine, ids) over one store —
+    the oracle setup: cache-on responses must be byte-identical to the
+    cache-off gateway's."""
+    ids = _publish(registry, "go", "2024-01", seed=1)
+    engine = ServingEngine(registry, cache_capacity=4)
+    gw_on = Gateway(engine)
+    gw_off = Gateway(engine, result_cache_entries=0)
+    yield gw_on, gw_off, engine, ids
+    gw_off.close()
+    gw_on.close()
+
+
+# --------------------------- unit: ResultCache ------------------------- #
+def test_entry_bound_evicts_and_counts():
+    c = ResultCache(max_entries=4, max_bytes=1 << 20)
+    for i in range(6):
+        c.put(("r", "go", "m", "v", str(i)), i, nbytes=10)
+    s = c.stats()
+    assert s["entries"] == 4 and s["evictions"] == 2
+    assert s["bytes"] == 40
+    assert c.get(("r", "go", "m", "v", "5")) == 5
+
+
+def test_byte_bound_evicts_independently_of_entry_bound():
+    c = ResultCache(max_entries=100, max_bytes=100)
+    for i in range(5):
+        c.put(("r", "go", "m", "v", str(i)), i, nbytes=30)
+    s = c.stats()
+    assert s["bytes"] <= 100 and s["entries"] == 3
+    assert s["evictions"] == 2
+
+
+def test_lfu_window_keeps_hot_head_over_one_hit_wonders():
+    """A scan of fresh keys must not flush a frequently-hit entry: the
+    evictor prefers the least-*frequently*-used entry within its cold
+    window."""
+    c = ResultCache(max_entries=8, max_bytes=1 << 20)
+    hot = ("r", "go", "m", "v", "hot")
+    c.put(hot, "hot", nbytes=1)
+    for _ in range(50):
+        assert c.get(hot) == "hot"
+    # hot is at the LRU cold end after these inserts, but its hit count
+    # shields it inside the eviction window
+    for i in range(8):
+        c.put(("r", "go", "m", "v", f"scan{i}"), i, nbytes=1)
+        c.get(hot)                      # stays warm the way real traffic is
+    assert c.get(hot) == "hot"
+    assert c.stats()["evictions"] >= 1
+
+
+def test_oversize_entry_refused_not_cached():
+    c = ResultCache(max_entries=8, max_bytes=100)
+    assert c.put(("r", "go", "m", "v", "big"), "x", nbytes=101) is False
+    assert len(c) == 0
+    assert c.stats()["oversize_rejects"] == 1
+
+
+def test_invalidate_ontology_drops_only_that_ontology():
+    c = ResultCache(max_entries=8, max_bytes=1 << 20)
+    c.put(("r", "go", "m", "v", "a"), 1, nbytes=1)
+    c.put(("r", "hp", "m", "v", "b"), 2, nbytes=1)
+    assert c.invalidate_ontology("go") == 1
+    assert c.get(("r", "go", "m", "v", "a")) is None
+    assert c.get(("r", "hp", "m", "v", "b")) == 2
+    assert c.stats()["invalidations"] == 1
+
+
+# ----------------------- gateway hit-path parity ----------------------- #
+def test_cached_routes_byte_identical_to_cache_off(pair):
+    """The acceptance criterion: for every cached route, a cache-on
+    gateway's repeat response is byte-for-byte the cache-off gateway's
+    response — same store, same wire codec."""
+    gw_on, gw_off, engine, ids = pair
+    cases = {
+        "get-vector": ("/get-vector/go/transe", {"query": ids[3]}),
+        "sim": ("/sim/go/transe", {"a": ids[0], "b": ids[1]}),
+        "closest-concepts": ("/closest-concepts/go/transe",
+                             {"query": ids[2], "k": 5}),
+    }
+    assert set(cases) == set(CACHED_ROUTES)
+    for route, (path, payload) in cases.items():
+        cold = json.dumps(gw_on.handle(path, dict(payload)))
+        hot = json.dumps(gw_on.handle(path, dict(payload)))    # cache hit
+        off = json.dumps(gw_off.handle(path, dict(payload)))
+        assert cold == hot == off, route
+    s = gw_on.result_cache.stats()
+    assert s["hits"] == len(cases) and s["misses"] >= len(cases)
+
+
+def test_hit_skips_scheduler_but_still_counts_request(pair):
+    gw_on, _, engine, ids = pair
+    gw_on.closest_concepts("go", "transe", ids[1], k=3)
+    submitted = gw_on.scheduler.stats["submitted"]
+    requests = gw_on.counters["requests"]
+    lat = gw_on.latency["closest-concepts"].snapshot()["count"]
+    gw_on.closest_concepts("go", "transe", ids[1], k=3)        # hit
+    assert gw_on.scheduler.stats["submitted"] == submitted     # no submit
+    assert gw_on.counters["requests"] == requests + 1          # still a req
+    assert gw_on.latency["closest-concepts"].snapshot()["count"] == lat + 1
+
+
+def test_bool_int_payloads_do_not_alias(pair):
+    """``True == 1`` in Python: a raw-tuple cache key would serve the
+    cached k=1 page for k=True, which the validator must 400. The
+    canonical-JSON key keeps them distinct."""
+    gw_on, _, engine, ids = pair
+    ok = gw_on.handle("/closest-concepts/go/transe",
+                      {"query": ids[0], "k": 1})
+    assert ok["type"] == "closest_concepts_response"
+    bad = gw_on.handle("/closest-concepts/go/transe",
+                       {"query": ids[0], "k": True})
+    assert bad["type"] == "error" and bad["code"] == "BAD_REQUEST"
+
+
+def test_unpinned_and_pinned_to_latest_share_one_entry(pair):
+    """version=None resolves to latest before keying, so the explicit
+    pin of the same version is the same entry (identical bytes)."""
+    gw_on, _, engine, ids = pair
+    a = gw_on.handle("/sim/go/transe", {"a": ids[0], "b": ids[1]})
+    b = gw_on.handle("/sim/go/transe", {"a": ids[0], "b": ids[1],
+                                        "version": "2024-01"})
+    assert json.dumps(a) == json.dumps(b)
+    assert gw_on.result_cache.stats()["hits"] == 1
+
+
+def test_publish_invalidate_edge_never_serves_stale_bytes(pair):
+    """The tentpole's correctness clause: across a publish→invalidate, an
+    unpinned request must serve the *new* version — and stay
+    byte-identical to a cache-off gateway — while pinned reads of the
+    old version stay correct (immutable snapshot)."""
+    gw_on, gw_off, engine, ids = pair
+    payload = {"query": ids[4], "k": 5}
+    old = gw_on.handle("/closest-concepts/go/transe", dict(payload))
+    assert old["version"] == "2024-01"
+    _publish(engine.registry, "go", "2024-02", seed=7)
+    engine.invalidate("go")
+    fresh = gw_on.handle("/closest-concepts/go/transe", dict(payload))
+    assert fresh["version"] == "2024-02"
+    assert json.dumps(fresh) == json.dumps(
+        gw_off.handle("/closest-concepts/go/transe", dict(payload)))
+    # the old version remains servable via an explicit pin — and the
+    # purge means this is a fresh miss, not a stale entry
+    pinned = gw_on.handle("/closest-concepts/go/transe",
+                          {**payload, "version": "2024-01"})
+    assert json.dumps(pinned) == json.dumps(old | {"version": "2024-01"})
+    assert gw_on.result_cache.stats()["invalidations"] >= 1
+
+
+def test_closed_gateway_does_not_serve_cached_hits(pair):
+    gw_on, _, engine, ids = pair
+    gw_on.get_vector("go", "transe", ids[0])
+    gw_on.close()
+    wire = gw_on.handle("/get-vector/go/transe", {"query": ids[0]})
+    assert wire["type"] == "error" and wire["code"] == "SHUTTING_DOWN"
+
+
+def test_result_cache_stats_in_stats_route(pair):
+    gw_on, gw_off, engine, ids = pair
+    gw_on.get_vector("go", "transe", ids[0])
+    gw_on.get_vector("go", "transe", ids[0])
+    rc = gw_on.stats().gateway["result_cache"]
+    assert rc["hits"] == 1 and rc["entries"] == 1
+    assert "result_cache" not in gw_off.stats().gateway
+
+
+def test_async_path_populates_and_serves_the_cache(pair):
+    gw_on, gw_off, engine, ids = pair
+
+    async def run():
+        async with AsyncGateway(gw_on) as ag:
+            first = await ag.closest_concepts("go", "transe", ids[6], k=4)
+            submitted = gw_on.scheduler.stats["submitted"]
+            second = await ag.closest_concepts("go", "transe", ids[6], k=4)
+            assert gw_on.scheduler.stats["submitted"] == submitted
+            return first, second
+
+    first, second = asyncio.run(run())
+    from repro.api import to_wire
+    assert json.dumps(to_wire(first)) == json.dumps(to_wire(second)) \
+        == json.dumps(gw_off.handle("/closest-concepts/go/transe",
+                                    {"query": ids[6], "k": 4}))

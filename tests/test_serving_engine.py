@@ -96,15 +96,19 @@ def test_lru_eviction_and_stats(registry):
     ids = [f"GO:{i:07d}" for i in range(N)]
     eng.similarity("go", "transe", ids[0], ids[1], version="v1")
     eng.similarity("go", "transe", ids[0], ids[1], version="v2")
-    eng.similarity("go", "transe", ids[0], ids[1], version="v2")   # hit
+    # a *distinct* pair on v2: the gateway's result cache would answer a
+    # repeat of the identical request without touching the index — this
+    # test is about the index LRU, so the second v2 read must miss there
+    eng.similarity("go", "transe", ids[0], ids[2], version="v2")   # hit
     eng.similarity("go", "transe", ids[0], ids[1], version="v3")   # evicts v1
     stats = eng.cache_stats()
     assert stats["size"] == 2 and stats["capacity"] == 2
     assert stats["hits"] == 1 and stats["misses"] == 3
     assert stats["evictions"] == 1
     assert ("go", "transe", "v1") not in eng.cache
-    # re-touching the evicted version rebuilds it (miss + eviction again)
-    eng.similarity("go", "transe", ids[0], ids[1], version="v1")
+    # re-touching the evicted version rebuilds it (miss + eviction again);
+    # again a fresh pair, so the result cache can't answer it
+    eng.similarity("go", "transe", ids[0], ids[3], version="v1")
     assert eng.cache_stats()["evictions"] == 2
     assert eng.cache_stats()["bytes"] > 0
 

@@ -135,6 +135,36 @@ def test_stats_merged_across_workers(pool):
     assert st["gateway"]["requests"] >= 12      # summed, not per-worker
     assert "latency" in st and "scheduler" in st
 
+    # transport-level 304s are pool-visible too (PR 7 satellite): a
+    # conditional re-fetch answered before dispatch must still surface
+    # in the merged workers.http block, with a latency histogram
+    conn = http.client.HTTPConnection("127.0.0.1", pool["port"], timeout=30)
+    try:
+        conn.request("GET", "/download/go/transe?limit=3")
+        resp = conn.getresponse()
+        resp.read()
+        etag = resp.getheader("ETag")
+        conn.request("GET", "/download/go/transe?limit=3",
+                     headers={"If-None-Match": etag})
+        resp = conn.getresponse()
+        resp.read()
+        assert resp.status == 304
+    finally:
+        conn.close()
+    deadline = time.time() + 15
+    nm, lat = 0, None
+    while time.time() < deadline:
+        http_block = _stats(pool["port"])["workers"].get("http", {})
+        nm = http_block.get("not_modified", 0)
+        lat = (http_block.get("latency_ms") or {}).get("not_modified")
+        # the serving worker's own /stats sees it live; a sibling's view
+        # waits for the next periodic state dump — poll either way
+        if nm >= 1 and lat and lat.get("count", 0) >= 1:
+            break
+        time.sleep(0.2)
+    assert nm >= 1
+    assert lat["count"] >= 1 and lat["p50_ms"] >= 0
+
 
 def test_publish_visible_across_processes(pool):
     """A publish+seal from THIS process becomes servable in the pool's
