@@ -51,6 +51,14 @@ corresponds to a system capability it claims:
                       < 5ms, HTTP 429 + Retry-After spot check
                       (benchmarks/bench_cache.py), written to
                       results/BENCH_cache.json
+  B12 scale           GO-scale serving curve: generate -> train -> publish
+                      -> serve per rung N (10k/40k/100k; --fast 1k/4k/10k
+                      in isolated subprocesses), q/s, publish->first-query,
+                      index build, peak RSS; gates: streamed O(block)
+                      device residency, per-row cost ratio <= 2x,
+                      sub-linear q/s degradation
+                      (benchmarks/bench_scale.py), written to
+                      results/BENCH_scale.json
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run                # full benchmarks
@@ -315,7 +323,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["kge", "serving", "update", "walks", "sched",
                              "concurrent", "gateway", "http", "http-mp",
-                             "cache"])
+                             "cache", "scale"])
     args = ap.parse_args()
 
     if args.fast and args.only is None:
@@ -388,6 +396,13 @@ def main():
             bench_http.write_results_mp(
                 {bench_http.section_key(args.fast): mp_rep})
             report["http_mp"] = mp_rep
+        if args.only in (None, "scale"):
+            print("[B12] GO-scale serving curve (subprocess rungs)")
+            from benchmarks import bench_scale
+            scl = bench_scale.run(fast=args.fast)
+            bench_scale.write_results(
+                {bench_scale.section_key(args.fast): scl})
+            report["scale"] = scl
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

@@ -45,6 +45,13 @@ RAW_ALIGN = 64          # bytes; row stride rounds up to this
 SEAL_MARKER = ".published"
 
 
+def norm_label(s: str) -> str:
+    """The paper's 'automatic normalization of case and whitespace' —
+    canonical here so publish-time sidecars and the serving layer agree on
+    one normalization (``core.serving`` imports this)."""
+    return " ".join(s.strip().lower().split())
+
+
 def _atomic_write_bytes(path: Path, payload: bytes) -> None:
     tmp = path.with_name(path.name + ".tmp")
     tmp.write_bytes(payload)
@@ -147,6 +154,10 @@ class SnapshotStore:
             "norms_offset_floats": int(n * stride),
             "ids": [str(x) for x in entity_ids],
             "labels": [str(x) for x in labels],
+            # autocomplete sidecar: unique normalized labels, pre-sorted at
+            # publish time so every worker's index load skips the O(n log n)
+            # re-sort (at 100k labels, once per process per version)
+            "sorted_labels": sorted({norm_label(str(x)) for x in labels}),
         }
         _atomic_write_text(d / RAW_HEADER, json.dumps(header))
         return d

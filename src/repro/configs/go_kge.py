@@ -31,3 +31,11 @@ class KGEWorkload:
 CONFIG = KGEWorkload(name="go", spec=GO_SPEC, n_terms=40_000)
 REDUCED = KGEWorkload(name="go", spec=GO_SPEC, n_terms=400,
                       train=TrainConfig(epochs=2, batch_size=128))
+#: GO-profile release series at KG-Hub scale (ROADMAP item 1): 100k terms
+#: exercises the streaming top-k residency, 100k-label autocomplete
+#: sidecars and OBO stream-parsing end to end.  Short training (the scale
+#: axis under test is N, not epochs) keeps train→publish tractable on CPU.
+SCALE = KGEWorkload(name="go-scale", spec=GO_SPEC, n_terms=100_000,
+                    models=("transe",),
+                    train=TrainConfig(epochs=1, batch_size=1024),
+                    n_versions=3)

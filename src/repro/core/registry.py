@@ -118,6 +118,11 @@ class EmbeddingRegistry:
         if self.store.has_raw(ontology, version, model_name):
             table, norms, header = self.store.open_table(
                 ontology, version, model_name)
+            if "sorted_labels" in header:
+                # publish-time autocomplete sidecar: hand it to the index
+                # so per-worker load skips the per-process label re-sort
+                meta = dict(meta)
+                meta["sorted_labels"] = header["sorted_labels"]
             return header["ids"], header["labels"], table, norms, meta
         arrays, _ = self.store.load(ontology, version, model_name)
         emb = np.asarray(arrays["embeddings"], dtype=np.float32)

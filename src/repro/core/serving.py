@@ -70,11 +70,10 @@ import jax.numpy as jnp
 
 from .metrics import LatencyHistogram
 from .registry import EmbeddingRegistry
-
-
-def _norm_label(s: str) -> str:
-    """The paper's 'automatic normalization of case and whitespace'."""
-    return " ".join(s.strip().lower().split())
+# canonical normalization lives with the store so publish-time sidecars
+# (sorted_labels) and serving agree; the old serving-local name survives
+# for importers (tests, gateway helpers)
+from ..checkpoint.store import norm_label as _norm_label
 
 
 def _prefix_upper_bound(p: str) -> Optional[str]:
@@ -124,51 +123,67 @@ class EmbeddingIndex:
     kept as-is — never copied into a private array.  Normalization is
     lazy: per-row L2 norms come from the sidecar (``norms=``, also a
     memmap view) or are computed once here, and unit rows are produced on
-    demand by ``unit_rows``.  The only private table is the device-resident
-    unit copy the top-k kernels need; host memory for the table itself
-    stays in the shared page cache, so N worker processes serving the same
-    snapshot pay for it once.
+    demand by ``unit_rows``.
+
+    Scale-oblivious device residency (PR 8): top-k streams the host table
+    through the kernel in fixed ``block_rows`` slabs with the norms folded
+    into the in-kernel score (``kernels.ops.topk_cosine``), so there is no
+    full-table device copy and *no* (N, d) unit array on either side —
+    peak device allocation is O(block_rows·d + Q·k) regardless of N.  Host
+    memory stays in the shared page cache, so worker processes serving the
+    same snapshot pay for the table once.  With a multi-device mesh the
+    raw rows + norms are laid out sharded instead (the residency there
+    *is* the sharding) and each shard normalizes its blocks in-kernel.
     """
 
     def __init__(self, entity_ids: Sequence[str], labels: Sequence[str],
                  embeddings: np.ndarray, url_prefix: str = "https://bio.kgvec2go.org/concept/",
                  use_pallas: Optional[bool] = None, mesh=None,
-                 norms: Optional[np.ndarray] = None):
+                 norms: Optional[np.ndarray] = None,
+                 block_rows: Optional[int] = None,
+                 sorted_labels: Optional[Sequence[str]] = None):
         self.entity_ids = list(entity_ids)
         self.labels = list(labels)
         self.url_prefix = url_prefix
         #: kernel backend: None = REPRO_USE_PALLAS env dispatch
         self.use_pallas = use_pallas
+        #: streaming slab size for the host→device top-k walk (None =
+        #: kernels.ops.STREAM_BLOCK_ROWS)
+        self.block_rows = block_rows
         emb = np.asarray(embeddings)
         if emb.dtype != np.float32:
             emb = emb.astype(np.float32)
         self.embeddings = emb
         if norms is None:
             norms = np.linalg.norm(emb, axis=1)
-        self.norms = np.asarray(norms)
+        self.norms = np.asarray(norms, dtype=np.float32)
         from ..kernels import ops as kops
         # only shard when the mesh actually has >1 device on the data axis;
-        # otherwise the single-device fast path below is strictly better
+        # otherwise the streaming host path below holds residency at
+        # O(block) without any device table at all
         self.mesh = mesh if kops.mesh_data_shards(mesh) > 1 else None
-        # device-resident copy of the immutable *unit* table: converting
-        # (N, d) per top-k call would dominate the serving hot path at
-        # paper scale. The host-side unit array is transient — dropped as
-        # soon as the device copy exists.
-        unit = self.unit_rows(slice(None))
         if self.mesh is not None:
-            # laid out P("data", None): each device holds an (N/devices, d)
-            # row block; top-k goes through the sharded local+merge path
-            self._unit_jnp, self._n_real = kops.shard_table(unit, self.mesh)
+            # raw rows + norms laid out P("data", …): each device holds an
+            # (N/devices, d) block it normalizes in-kernel per tile —
+            # no unit copy exists on any device
+            (self._table_sharded, self._norms_sharded,
+             self._n_real) = kops.shard_table_raw(emb, self.norms, self.mesh)
         else:
-            self._unit_jnp = jnp.asarray(unit)
+            self._table_sharded = self._norms_sharded = None
             self._n_real = emb.shape[0]
-        del unit
         self._id_to_row = {i: r for r, i in enumerate(self.entity_ids)}
         self._label_to_row: Dict[str, int] = {}
         for r, lbl in enumerate(self.labels):
             self._label_to_row.setdefault(_norm_label(lbl), r)
-        #: sorted normalized labels for autocomplete (paper §6 future work)
-        self._sorted_labels = sorted(self._label_to_row)
+        #: sorted normalized labels for autocomplete (paper §6 future work).
+        #: ``sorted_labels`` is the publish-time sidecar (store header);
+        #: accepted only when consistent with this table's label set so a
+        #: stale sidecar can never corrupt autocomplete.
+        if (sorted_labels is not None
+                and len(sorted_labels) == len(self._label_to_row)):
+            self._sorted_labels = list(sorted_labels)
+        else:
+            self._sorted_labels = sorted(self._label_to_row)
 
     @property
     def nbytes(self) -> int:
@@ -190,8 +205,17 @@ class EmbeddingIndex:
     def unit(self) -> np.ndarray:
         """Full normalized table, materialized per call — kept for
         callers/tests that want the whole matrix; hot paths use
-        ``unit_rows`` or the device-resident copy."""
+        ``unit_rows`` or the streaming/sharded kernel paths."""
         return self.unit_rows(slice(None))
+
+    def device_table_bytes(self) -> int:
+        """Bytes of *table* data pinned on devices by this index: 0 on the
+        streaming host path (the scale invariant the bench asserts — only
+        transient O(block) slabs ever land on device), table + norms bytes
+        when mesh-sharded (residency there is the sharding itself)."""
+        if self._table_sharded is None:
+            return 0
+        return int(self._table_sharded.nbytes + self._norms_sharded.nbytes)
 
     # ------------------------------------------------------------------ #
     def autocomplete(self, prefix: str, limit: int = 10) -> List[str]:
@@ -282,13 +306,17 @@ class EmbeddingIndex:
         from ..kernels import ops as kops
         if self.mesh is not None:
             scores, idx, valid = kops.topk_cosine_sharded(
-                jnp.asarray(qvec), self._unit_jnp, int(k),
+                jnp.asarray(qvec), self._table_sharded, int(k),
                 exclude_rows=jnp.asarray(excl), mesh=self.mesh,
-                n_valid=self._n_real, use_pallas=self.use_pallas)
+                n_valid=self._n_real, use_pallas=self.use_pallas,
+                norms=self._norms_sharded)
         else:
+            # streaming host path: the raw table (np/memmap) is walked in
+            # O(block_rows) slabs, norms folded in-kernel — no device copy
             scores, idx, valid = kops.topk_cosine(
-                jnp.asarray(qvec), self._unit_jnp, int(k),
-                exclude_rows=jnp.asarray(excl), use_pallas=self.use_pallas)
+                qvec, self.embeddings, int(k),
+                exclude_rows=excl, use_pallas=self.use_pallas,
+                norms=self.norms, block_rows=self.block_rows)
         scores, idx, valid = np.asarray(scores), np.asarray(idx), np.asarray(valid)
         out: List[List[ClosestConcept]] = []
         for qi in range(len(rows)):
@@ -417,10 +445,11 @@ class ServingEngine:
         if idx is None:
             # serve path: zero-copy mmap view + sidecar norms when the raw
             # layout exists; .npz fallback for pre-raw snapshots
-            ids, labels, table, norms, _ = self.registry.get_serving(
+            ids, labels, table, norms, meta = self.registry.get_serving(
                 ontology, model, version)
             idx = EmbeddingIndex(ids, labels, table, norms=norms,
-                                 use_pallas=self.use_pallas, mesh=self.mesh)
+                                 use_pallas=self.use_pallas, mesh=self.mesh,
+                                 sorted_labels=meta.get("sorted_labels"))
             self.cache.put(key, idx)
         return idx
 

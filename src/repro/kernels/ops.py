@@ -5,12 +5,25 @@ interpret mode (numerically identical, slow); the pure-jnp reference path is
 the default for jitted production lowering on CPU and the shape source of
 truth. On a real TPU, flip REPRO_USE_PALLAS=1 (or pass use_pallas=True) and
 the same call sites run the compiled kernels with interpret=False.
+
+Streaming table residency (PR 8): when ``topk_cosine`` receives a host
+table (``np.ndarray`` / ``np.memmap``), it never puts the whole (N, d)
+array on device.  The host loop walks the table in fixed ``block_rows``
+slabs — each slab is transferred, scored (with the sidecar ``norms``
+folded into the kernel, so no unit copy exists on *either* side), and
+merged into a running (Q, k) top-k.  Peak device allocation is
+O(block_rows·d + Q·k) regardless of N; ``stream_stats`` records it so the
+scale bench can assert the bound.  A jnp-array table keeps the original
+device-resident single-launch path (the mesh-sharded path also stays
+device-resident — residency there is the sharding itself).
 """
 from __future__ import annotations
 
 import functools
 import os
 from typing import Optional, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
@@ -26,27 +39,167 @@ _ENV_FLAG = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
 # on CPU, pallas runs in interpret mode; on TPU, compiled
 _INTERPRET = jax.default_backend() != "tpu"
 
+#: host-block size for the streaming top-k driver: 8192 rows × 200 dims ×
+#: 4 B ≈ 6.6 MB per transfer — large enough to amortize dispatch, small
+#: enough that a dozen concurrent streams fit VMEM-scale budgets
+STREAM_BLOCK_ROWS = 8192
+
+#: in-shard block size for the blocked ref path inside the sharded merge
+SHARD_BLOCK_N = 1024
+
+#: cumulative streaming-driver counters (reset with reset_stream_stats):
+#: ``peak_block_bytes`` is the largest single device transfer (table block
+#: + norms block) any streamed call made — the scale bench asserts it stays
+#: O(block_rows·d), i.e. no full-table private device copy ever happened
+stream_stats = {"calls": 0, "blocks": 0, "peak_block_bytes": 0}
+
+
+def reset_stream_stats() -> None:
+    stream_stats.update({"calls": 0, "blocks": 0, "peak_block_bytes": 0})
+
 
 def _use_pallas(flag: Optional[bool]) -> bool:
     return _ENV_FLAG if flag is None else flag
 
 
-def topk_cosine(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
-                exclude_rows: Optional[jnp.ndarray] = None,
-                use_pallas: Optional[bool] = None
+@functools.partial(jax.jit, static_argnames=("k", "has_norms"))
+def _stream_step_ref(q, blk, nrm, offset, limit, excl, run_s, run_i, *,
+                     k: int, has_norms: bool):
+    """Score one (block_rows, d) slab and merge it into the running top-k.
+
+    ``offset``/``limit`` are traced scalars (block start, real table rows),
+    so every block of every same-shaped table reuses one compiled step.
+    Tie-order matches the one-shot oracle: running entries concatenate
+    first and always carry lower global indices than the current block
+    (blocks ascend), so equal scores resolve to the lower global index —
+    exactly ``lax.top_k`` over the full score matrix.
+    """
+    if has_norms:
+        blk = blk / jnp.maximum(nrm[:, None], 1e-12)
+    s = q @ blk.T                                          # (Q, bs)
+    col = offset + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col < limit, s, ref.NEG_INF)             # tail-pad rows
+    s = jnp.where(col == excl[:, None], ref.NEG_INF, s)    # self-exclusion
+    cand_s = jnp.concatenate([run_s, s], axis=1)
+    cand_i = jnp.concatenate([run_i, col], axis=1)
+    s2, pos = jax.lax.top_k(cand_s, k)
+    return s2, jnp.take_along_axis(cand_i, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _stream_merge(run_s, run_i, blk_s, blk_i, offset, *, k: int):
+    """Fold one block's local top-k (pallas backend) into the running
+    top-k; local indices shift by ``offset`` to global.  Same concat order
+    (running first) as ``_stream_step_ref`` — same tie semantics."""
+    cand_s = jnp.concatenate([run_s, blk_s], axis=1)
+    cand_i = jnp.concatenate([run_i, blk_i + offset], axis=1)
+    s2, pos = jax.lax.top_k(cand_s, k)
+    return s2, jnp.take_along_axis(cand_i, pos, axis=1)
+
+
+def _topk_stream(q_unit, e_table: np.ndarray, k: int, exclude_rows,
+                 norms, use_pallas: bool, block_rows: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Host-block streaming driver over an ``np.ndarray``/``np.memmap``
+    table: per block, copy a (bs, d) slab host→device, score it (norms
+    folded in-kernel), merge into the running (Q, k') top-k.  The table is
+    never resident on device and never normalized as a whole anywhere."""
+    n, d = e_table.shape
+    qn = q_unit.shape[0]
+    k_c = min(int(k), n)
+    bs = min(int(block_rows), n)
+    if exclude_rows is None:
+        excl_np = np.full((qn,), -1, np.int32)
+    else:
+        excl_np = np.asarray(exclude_rows, np.int32)
+    excl = jnp.asarray(excl_np)
+    q = jnp.asarray(q_unit, jnp.float32)
+    has_norms = norms is not None
+    norms_np = None if norms is None else np.asarray(norms)
+
+    run_s = jnp.full((qn, k_c), ref.NEG_INF, jnp.float32)
+    run_i = jnp.zeros((qn, k_c), jnp.int32)
+    limit = jnp.int32(n)
+    peak = 0
+    n_blocks = 0
+    blk_host = np.zeros((bs, d), np.float32)
+    nrm_host = np.ones((bs,), np.float32)
+    for start in range(0, n, bs):
+        rows = min(bs, n - start)
+        if use_pallas:
+            # the pallas kernel tiles internally and masks past its own
+            # n_real, so hand it exactly the real rows of this slab
+            blk = jnp.asarray(np.ascontiguousarray(
+                e_table[start:start + rows], dtype=np.float32))
+            nrm = (jnp.asarray(np.ascontiguousarray(
+                norms_np[start:start + rows], dtype=np.float32))
+                if has_norms else None)
+            loc = np.where((excl_np >= start) & (excl_np < start + rows),
+                           excl_np - start, -1).astype(np.int32)
+            kb = min(k_c, rows)
+            bn = min(1024, max(128, rows))
+            blk_s, blk_i, _ = topk_cosine_pallas(
+                q, blk, kb, exclude_rows=jnp.asarray(loc), norms=nrm,
+                block_n=bn, interpret=_INTERPRET)
+            run_s, run_i = _stream_merge(run_s, run_i, blk_s, blk_i,
+                                         jnp.int32(start), k=k_c)
+            peak = max(peak, rows * d * 4 + (rows * 4 if has_norms else 0))
+        else:
+            # fixed-size slab (tail zero-padded) → one jitted step shape
+            blk_host[:rows] = e_table[start:start + rows]
+            if rows < bs:
+                blk_host[rows:] = 0.0
+            if has_norms:
+                nrm_host[:rows] = norms_np[start:start + rows]
+                if rows < bs:
+                    nrm_host[rows:] = 1.0
+            run_s, run_i = _stream_step_ref(
+                q, jnp.asarray(blk_host), jnp.asarray(nrm_host),
+                jnp.int32(start), limit, excl, run_s, run_i,
+                k=k_c, has_norms=has_norms)
+            peak = max(peak, bs * d * 4 + bs * 4)
+        n_blocks += 1
+    stream_stats["calls"] += 1
+    stream_stats["blocks"] += n_blocks
+    stream_stats["peak_block_bytes"] = max(
+        stream_stats["peak_block_bytes"], peak)
+    excluded = ((excl_np >= 0) & (excl_np < n)).astype(np.int32)
+    valid = jnp.asarray(np.minimum(k_c, n - excluded).astype(np.int32))
+    return run_s, run_i, valid
+
+
+def topk_cosine(q_unit, e_table, k: int,
+                exclude_rows=None,
+                use_pallas: Optional[bool] = None,
+                norms=None,
+                block_rows: Optional[int] = None,
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """(Q, d) x (N, d) -> (scores, indices, valid), descending per row.
 
     k is clamped to N; ``exclude_rows`` (−1 = none) masks one table row per
     query inside the kernel; entries past ``valid[q]`` are sentinel padding
     that callers must not surface.
+
+    ``e_table`` may be a host ``np.ndarray``/``np.memmap`` — then the
+    streaming driver above runs (norms folded in-kernel, O(block) device
+    scratch).  A jnp array takes the single-launch device path, unchanged
+    from the pre-streaming contract.  ``norms`` (per-row L2) lets both
+    paths score a raw, un-normalized table.
     """
+    if isinstance(e_table, np.ndarray) and not isinstance(e_table, jnp.ndarray):
+        return _topk_stream(q_unit, e_table, k, exclude_rows=exclude_rows,
+                            norms=norms, use_pallas=_use_pallas(use_pallas),
+                            block_rows=block_rows or STREAM_BLOCK_ROWS)
     if _use_pallas(flag=use_pallas):
-        block_n = min(1024, max(128, e_unit.shape[0]))
-        return topk_cosine_pallas(q_unit, e_unit, k,
-                                  exclude_rows=exclude_rows,
+        block_n = min(1024, max(128, e_table.shape[0]))
+        return topk_cosine_pallas(q_unit, e_table, k,
+                                  exclude_rows=exclude_rows, norms=norms,
                                   block_n=block_n, interpret=_INTERPRET)
-    return ref.topk_cosine_ref(q_unit, e_unit, k, exclude_rows=exclude_rows)
+    if norms is not None:
+        return ref.topk_cosine_blocked_ref(
+            q_unit, e_table, k, exclude_rows=exclude_rows, norms=norms,
+            block_n=min(SHARD_BLOCK_N, max(128, e_table.shape[0])))
+    return ref.topk_cosine_ref(q_unit, e_table, k, exclude_rows=exclude_rows)
 
 
 def mesh_data_shards(mesh, axis: str = "data") -> int:
@@ -72,9 +225,31 @@ def shard_table(e_unit: jnp.ndarray, mesh, axis: str = "data"
     return jax.device_put(e, NamedSharding(mesh, P(axis, None))), int(e_unit.shape[0])
 
 
+def shard_table_raw(e_table, norms, mesh, axis: str = "data"
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray, int]:
+    """:func:`shard_table` for a *raw* (un-normalized) table plus its
+    per-row L2 norms: rows are zero-padded, norms are one-padded (so pad
+    rows stay zero after the in-kernel division), and both land sharded
+    ``P(axis, …)`` on the mesh.  Returns ``(table, norms, n_valid)`` —
+    pass all three (norms via ``norms=``) to :func:`topk_cosine_sharded`,
+    which then normalizes each in-shard block in-kernel: no full unit copy
+    exists on any device.
+    """
+    shards = mesh_data_shards(mesh, axis)
+    e = jnp.asarray(e_table, jnp.float32)
+    nrm = jnp.asarray(norms, jnp.float32)
+    pad = -e.shape[0] % shards
+    if pad:
+        e = jnp.concatenate([e, jnp.zeros((pad, e.shape[1]), e.dtype)], axis=0)
+        nrm = jnp.concatenate([nrm, jnp.ones((pad,), nrm.dtype)])
+    return (jax.device_put(e, NamedSharding(mesh, P(axis, None))),
+            jax.device_put(nrm, NamedSharding(mesh, P(axis))),
+            int(e_table.shape[0]))
+
+
 @functools.lru_cache(maxsize=128)
 def _sharded_topk_fn(mesh, axis: str, n_real: int, n_total: int, k: int,
-                     use_pallas: bool, interpret: bool):
+                     use_pallas: bool, interpret: bool, has_norms: bool):
     """Build (and cache) the jitted sharded top-k for one table layout.
 
     Each shard runs the existing single-device kernel contract on its
@@ -98,14 +273,22 @@ def _sharded_topk_fn(mesh, axis: str, n_real: int, n_total: int, k: int,
     k_c = min(k, n_real)
     k_fetch = min(k + n_pad, local_n)
 
-    def local_topk(q, e_loc, excl):
+    def local_topk(q, e_loc, nrm_loc, excl):
         off = jax.lax.axis_index(axis).astype(jnp.int32) * local_n
         loc = jnp.where((excl >= off) & (excl < off + local_n),
                         excl - off, -1).astype(jnp.int32)
+        block_n = min(SHARD_BLOCK_N, max(128, local_n))
         if use_pallas:
-            block_n = min(1024, max(128, local_n))
-            s, i, _ = topk_cosine_pallas(q, e_loc, k_fetch, exclude_rows=loc,
-                                         block_n=block_n, interpret=interpret)
+            s, i, _ = topk_cosine_pallas(
+                q, e_loc, k_fetch, exclude_rows=loc,
+                norms=nrm_loc if has_norms else None,
+                block_n=block_n, interpret=interpret)
+        elif has_norms:
+            # blocks-within-shards: the blocked ref walks this shard's
+            # rows in O(block_n) tiles, normalizing each tile in-kernel
+            s, i, _ = ref.topk_cosine_blocked_ref(
+                q, e_loc, k_fetch, exclude_rows=loc, norms=nrm_loc,
+                block_n=block_n)
         else:
             s, i, _ = ref.topk_cosine_ref(q, e_loc, k_fetch, exclude_rows=loc)
         gi = i + off
@@ -115,13 +298,13 @@ def _sharded_topk_fn(mesh, axis: str, n_real: int, n_total: int, k: int,
     # check_rep=False: pallas_call has no replication rule yet, and the
     # outputs are explicitly sharded over ``axis`` anyway
     mapped = shard_map(local_topk, mesh=mesh,
-                       in_specs=(P(None, None), P(axis, None), P(None)),
+                       in_specs=(P(None, None), P(axis, None), P(axis), P(None)),
                        out_specs=(P(None, axis), P(None, axis)),
                        check_rep=False)
 
     @jax.jit
-    def run(q, e, excl):
-        cand_s, cand_i = mapped(q, e, excl)      # (Q, shards * k_fetch)
+    def run(q, e, nrm, excl):
+        cand_s, cand_i = mapped(q, e, nrm, excl)  # (Q, shards * k_fetch)
         s, pos = jax.lax.top_k(cand_s, k_c)
         i = jnp.take_along_axis(cand_i, pos, axis=1)
         excluded = ((excl >= 0) & (excl < n_real)).astype(jnp.int32)
@@ -135,7 +318,8 @@ def topk_cosine_sharded(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
                         exclude_rows: Optional[jnp.ndarray] = None,
                         mesh=None, axis: str = "data",
                         n_valid: Optional[int] = None,
-                        use_pallas: Optional[bool] = None
+                        use_pallas: Optional[bool] = None,
+                        norms: Optional[jnp.ndarray] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Device-sharded :func:`topk_cosine`: the (N, d) table is split in row
     blocks across the mesh's ``axis`` devices, each shard computes a local
@@ -143,7 +327,8 @@ def topk_cosine_sharded(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
     shard candidates to the global top-k.
 
     ``e_unit`` may carry zero-row padding (``n_valid`` = real rows; use
-    :func:`shard_table` to lay the table out). Falls back to the
+    :func:`shard_table` — or :func:`shard_table_raw` with ``norms`` for a
+    raw table normalized in-kernel per block). Falls back to the
     single-device path — bit-identical contract — when the mesh has one
     device (or none) on ``axis``.
     """
@@ -152,7 +337,8 @@ def topk_cosine_sharded(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
     shards = mesh_data_shards(mesh, axis)
     if shards <= 1:
         return topk_cosine(q_unit, e_unit[:n_real], k,
-                           exclude_rows=exclude_rows, use_pallas=use_pallas)
+                           exclude_rows=exclude_rows, use_pallas=use_pallas,
+                           norms=None if norms is None else norms[:n_real])
     if n_total % shards:
         raise ValueError(
             f"table rows ({n_total}) must divide the {axis!r} axis "
@@ -160,9 +346,18 @@ def topk_cosine_sharded(q_unit: jnp.ndarray, e_unit: jnp.ndarray, k: int,
     qn = q_unit.shape[0]
     if exclude_rows is None:
         exclude_rows = jnp.full((qn,), -1, jnp.int32)
+    has_norms = norms is not None
+    if has_norms:
+        nrm = jnp.asarray(norms, jnp.float32)
+    else:
+        # uniform operand shape keeps one cached shard_map program; the
+        # has_norms static flag skips the division entirely
+        nrm = jnp.ones((n_total,), jnp.float32)
+        nrm = jax.device_put(nrm, NamedSharding(mesh, P(axis)))
     run = _sharded_topk_fn(mesh, axis, n_real, n_total, int(k),
-                           _use_pallas(flag=use_pallas), _INTERPRET)
-    return run(q_unit.astype(jnp.float32), e_unit,
+                           _use_pallas(flag=use_pallas), _INTERPRET,
+                           has_norms)
+    return run(q_unit.astype(jnp.float32), e_unit, nrm,
                jnp.asarray(exclude_rows, jnp.int32))
 
 

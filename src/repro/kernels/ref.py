@@ -14,6 +14,75 @@ NEG_INF = -1e30
 
 
 # --------------------------- topk_similarity --------------------------- #
+def topk_cosine_blocked_ref(
+    q_unit: jnp.ndarray,
+    e_table: jnp.ndarray,
+    k: int,
+    exclude_rows: Optional[jnp.ndarray] = None,
+    norms: Optional[jnp.ndarray] = None,
+    block_n: int = 1024,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Blocked pure-jnp top-k: same contract as :func:`topk_cosine_ref`,
+    computed over fixed (block_n, d) row tiles with a running top-k merge —
+    scratch is O(block_n + k) regardless of N, so one jitted shape serves a
+    100k-row table as well as a 1k-row one (it is also what each shard runs
+    inside ``topk_cosine_sharded``: blocks-within-shards).
+
+    ``norms`` (optional, per-row L2) folds normalization into the score:
+    ``e_table`` may then be the raw mmap rows and each block is normalized
+    with the exact float32 ops ``EmbeddingIndex.unit_rows`` uses, so scores
+    are bit-identical to pre-normalizing the full table on the host.
+
+    Merge tie-order matches one-shot ``lax.top_k`` on the full score
+    matrix: running entries are concatenated *before* the current block's
+    candidates and blocks are visited in ascending row order, so among
+    equal scores the lower global index always wins — same as the global
+    argmax. (Entries past ``valid`` are sentinel padding and may differ
+    from the one-shot oracle there; the contract forbids surfacing them.)
+    """
+    n, d = e_table.shape
+    qn = q_unit.shape[0]
+    k_c = min(k, n)
+    if exclude_rows is None:
+        excl = jnp.full((qn,), -1, jnp.int32)
+    else:
+        excl = jnp.asarray(exclude_rows, jnp.int32)
+    q = jnp.asarray(q_unit, jnp.float32)
+    e = jnp.asarray(e_table, jnp.float32)
+    nrm = None if norms is None else jnp.asarray(norms, jnp.float32)
+    n_pad = -n % block_n
+    if n_pad:
+        e = jnp.concatenate([e, jnp.zeros((n_pad, d), e.dtype)], axis=0)
+        if nrm is not None:
+            # pad norms with 1.0: pad rows are zero vectors, and the
+            # col >= n mask below sends them to -inf anyway
+            nrm = jnp.concatenate([nrm, jnp.ones((n_pad,), nrm.dtype)])
+    n_blocks = (n + n_pad) // block_n
+    iota = jax.lax.broadcasted_iota(jnp.int32, (qn, block_n), 1)
+
+    def body(b, carry):
+        run_s, run_i = carry
+        blk = jax.lax.dynamic_slice(e, (b * block_n, 0), (block_n, d))
+        if nrm is not None:
+            nb = jax.lax.dynamic_slice(nrm, (b * block_n,), (block_n,))
+            blk = blk / jnp.maximum(nb[:, None], 1e-12)
+        s = q @ blk.T                                      # (Q, block_n)
+        col = b * block_n + iota
+        s = jnp.where(col < n, s, NEG_INF)                 # pad rows
+        s = jnp.where(col == excl[:, None], NEG_INF, s)    # self-exclusion
+        cand_s = jnp.concatenate([run_s, s], axis=1)
+        cand_i = jnp.concatenate([run_i, col], axis=1)
+        s2, pos = jax.lax.top_k(cand_s, k_c)
+        return s2, jnp.take_along_axis(cand_i, pos, axis=1)
+
+    run = (jnp.full((qn, k_c), NEG_INF, jnp.float32),
+           jnp.zeros((qn, k_c), jnp.int32))
+    s, i = jax.lax.fori_loop(0, n_blocks, body, run)
+    excluded = ((excl >= 0) & (excl < n)).astype(jnp.int32)
+    valid = jnp.minimum(k_c, n - excluded)
+    return s, i, valid
+
+
 def topk_cosine_ref(
     q_unit: jnp.ndarray,
     e_unit: jnp.ndarray,

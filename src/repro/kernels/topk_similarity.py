@@ -33,8 +33,8 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _topk_kernel(q_ref, e_ref, x_ref, out_s_ref, out_i_ref, out_v_ref, *,
-                 k: int, block_n: int, n_real: int):
+def _topk_kernel(q_ref, e_ref, n_ref, x_ref, out_s_ref, out_i_ref, out_v_ref,
+                 *, k: int, block_n: int, n_real: int, has_norms: bool):
     step = pl.program_id(0)
     excl = x_ref[...]                    # (Q, 1) int32, -1 = no exclusion
 
@@ -47,6 +47,11 @@ def _topk_kernel(q_ref, e_ref, x_ref, out_s_ref, out_i_ref, out_v_ref, *,
 
     q = q_ref[...]                       # (Q, d)
     e = e_ref[...]                       # (block_n, d)
+    if has_norms:
+        # fold the per-row L2 norms into the score: the exact float32 ops
+        # EmbeddingIndex.unit_rows uses, so raw mmap rows + sidecar norms
+        # score bit-identically to a host-normalized table
+        e = e / jnp.maximum(n_ref[...], 1e-12)            # (block_n, 1) bcast
     # MXU matmul in fp32 accumulation
     s = jnp.dot(q, e.T, preferred_element_type=jnp.float32)   # (Q, block_n)
     col = step * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -72,36 +77,49 @@ def _topk_kernel(q_ref, e_ref, x_ref, out_s_ref, out_i_ref, out_v_ref, *,
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
 def topk_cosine_pallas(
     q_unit: jnp.ndarray,      # (Q, d) row-normalized queries
-    e_unit: jnp.ndarray,      # (N, d) row-normalized table
+    e_unit: jnp.ndarray,      # (N, d) table — row-normalized unless norms given
     k: int,
     exclude_rows: Optional[jnp.ndarray] = None,   # (Q,) int32, -1 = none
+    norms: Optional[jnp.ndarray] = None,          # (N,) per-row L2 norms
     block_n: int = 1024,
     interpret: bool = True,   # CPU container: interpret; on TPU pass False
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Returns (scores (Q, k'), indices (Q, k'), valid (Q,)) with
     k' = min(k, N); rows are descending and entries past ``valid[q]`` are
-    sentinel padding."""
+    sentinel padding.  With ``norms``, ``e_unit`` may be the *raw* table
+    and each streamed block is normalized in-kernel — no (N, d) unit copy
+    ever exists."""
     qn, d = q_unit.shape
     n = e_unit.shape[0]
     k = min(k, n)                        # static clamp: k never exceeds N
     if exclude_rows is None:
         exclude_rows = jnp.full((qn,), -1, jnp.int32)
     excl = jnp.asarray(exclude_rows, jnp.int32).reshape(qn, 1)
-    # pad N to a block multiple with -inf-scoring rows (zero vectors)
+    has_norms = norms is not None
+    # pad N to a block multiple with -inf-scoring rows (zero vectors);
+    # pad norms with 1.0 so the pad rows stay zero after division
     n_pad = -n % block_n
     if n_pad:
         e_unit = jnp.concatenate(
             [e_unit, jnp.zeros((n_pad, d), e_unit.dtype)], axis=0
         )
+    if has_norms:
+        nrm = jnp.asarray(norms, jnp.float32).reshape(n, 1)
+        if n_pad:
+            nrm = jnp.concatenate([nrm, jnp.ones((n_pad, 1), nrm.dtype)])
+    else:
+        nrm = jnp.ones((n + n_pad, 1), jnp.float32)
     n_total = n + n_pad
     grid = (n_total // block_n,)
 
     out_s, out_i, out_v = pl.pallas_call(
-        functools.partial(_topk_kernel, k=k, block_n=block_n, n_real=n),
+        functools.partial(_topk_kernel, k=k, block_n=block_n, n_real=n,
+                          has_norms=has_norms),
         grid=grid,
         in_specs=[
             pl.BlockSpec((qn, d), lambda i: (0, 0)),          # q resident
             pl.BlockSpec((block_n, d), lambda i: (i, 0)),     # stream table
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),     # stream norms
             pl.BlockSpec((qn, 1), lambda i: (0, 0)),          # exclusions
         ],
         out_specs=[
@@ -115,6 +133,6 @@ def topk_cosine_pallas(
             jax.ShapeDtypeStruct((qn, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(q_unit.astype(jnp.float32), e_unit.astype(jnp.float32), excl)
+    )(q_unit.astype(jnp.float32), e_unit.astype(jnp.float32), nrm, excl)
 
     return out_s, out_i, out_v[:, 0]

@@ -71,16 +71,113 @@ HP_SPEC = OntologySpec(
 )
 
 
+#: term count at which :func:`generate` switches to the chunked vectorized
+#: generator — the per-term python loop is O(n²) in the candidate scan and
+#: takes minutes at GO scale (100k)
+FAST_GEN_THRESHOLD = 20_000
+
+
+def _generate_fast(spec: OntologySpec, rng: np.random.Generator, n: int
+                   ) -> KnowledgeGraph:
+    """Chunked vectorized preferential-attachment generator for GO-scale
+    term counts (seconds at 100k vs minutes for the per-term loop).
+
+    Parents for a chunk are sampled from the *pre-chunk* prefix (weights
+    frozen at the chunk boundary), so every parent index is strictly lower
+    than its child — the is_a graph stays a DAG by construction.  Chunk
+    sizes double from 256 up to 4096: early chunks stay small so the hub
+    structure still forms.  This is a different (vectorized) draw sequence
+    than the small-n loop — a new regime, not a replacement; small-n
+    callers keep their historical streams.
+    """
+    n_roots = len(spec.namespaces)
+    ids = [f"{spec.prefix}:{i:07d}" for i in range(n)]
+    ns_of = np.empty(n, dtype=np.int64)
+    ns_of[:n_roots] = np.arange(n_roots)
+    weight = np.zeros(n, dtype=np.float64)
+    weight[:n_roots] = 1.0
+
+    terms: Dict[str, TermMeta] = {}
+    for i in range(n_roots):
+        terms[ids[i]] = TermMeta(
+            ids[i], spec.namespaces[i].replace("_", " "), spec.namespaces[i])
+
+    ns_of[n_roots:] = rng.integers(n_roots, size=n - n_roots)
+    # vectorized labels, ordinal-suffixed: at 100k the base vocabulary
+    # (~6.5k combos) would collide constantly, which is unlike GO/HP where
+    # labels are (nearly) unique — the suffix keeps resolution/autocomplete
+    # realistic at scale
+    adj = rng.integers(len(_ADJ), size=n)
+    noun = rng.integers(len(_NOUN), size=n)
+    obj = rng.integers(len(_OBJ), size=n)
+
+    heads: List[str] = []
+    rels: List[str] = []
+    tails: List[str] = []
+    start = n_roots
+    chunk = 256
+    while start < n:
+        size = min(chunk, n - start)
+        idx = np.arange(start, start + size)
+        chunk_ns = ns_of[idx]
+        parent = np.empty(size, dtype=np.int64)
+        second = np.full(size, -1, dtype=np.int64)
+        want2 = rng.random(size) < spec.multi_parent_frac
+        for ns in range(n_roots):
+            m = chunk_ns == ns
+            cnt = int(m.sum())
+            if not cnt:
+                continue
+            cand = np.nonzero(ns_of[:start] == ns)[0]
+            w = weight[cand] ** spec.pref_attach
+            p = w / w.sum()
+            parent[m] = cand[rng.choice(len(cand), size=cnt, p=p)]
+            second[m] = np.where(want2[m],
+                                 cand[rng.choice(len(cand), size=cnt, p=p)],
+                                 -1)
+        second[second == parent] = -1          # distinct second parent only
+        for j, i in enumerate(idx):
+            terms[ids[i]] = TermMeta(
+                ids[i],
+                f"{_ADJ[adj[i]]} {_NOUN[noun[i]]} of {_OBJ[obj[i]]} {i}",
+                spec.namespaces[chunk_ns[j]])
+            heads.append(ids[i]); rels.append("is_a")
+            tails.append(ids[parent[j]])
+            if second[j] >= 0:
+                heads.append(ids[i]); rels.append("is_a")
+                tails.append(ids[second[j]])
+        np.add.at(weight, parent, 1.0)
+        weight[idx] = 1.0
+        if spec.side_relations:
+            side = np.nonzero(rng.random(size) < spec.side_rel_frac)[0]
+            if side.size:
+                rel_i = rng.integers(len(spec.side_relations), size=side.size)
+                tgt = rng.integers(0, idx[side])   # any lower index, any ns
+                for j, ri, t in zip(side, rel_i, tgt):
+                    heads.append(ids[idx[j]])
+                    rels.append(spec.side_relations[ri])
+                    tails.append(ids[t])
+        start += size
+        chunk = min(chunk * 2, 4096)
+
+    triples = list(zip(heads, rels, tails))
+    return KnowledgeGraph.from_triples(triples, terms)
+
+
 def generate(spec: OntologySpec, seed: int = 0, n_terms: Optional[int] = None) -> KnowledgeGraph:
     """Generate one ontology version.
 
     Parents are always lower-indexed → the is_a graph is a DAG by
-    construction, like GO/HP.
+    construction, like GO/HP.  At ``FAST_GEN_THRESHOLD`` terms and above
+    the chunked vectorized generator takes over (same structural
+    invariants, different draw sequence — small-n streams are unchanged).
     """
     rng = np.random.default_rng(seed)
     n = int(n_terms or spec.n_terms)
     n_roots = len(spec.namespaces)
     assert n > n_roots
+    if n >= FAST_GEN_THRESHOLD:
+        return _generate_fast(spec, rng, n)
 
     ids = [f"{spec.prefix}:{i:07d}" for i in range(n)]
     ns_of = np.empty(n, dtype=np.int64)
@@ -140,25 +237,45 @@ def evolve(
     triples = kg.string_triples()
 
     # --- obsolete leaf-ish terms (never roots) -------------------------- #
+    # one-pass batch filter: the per-ident refilter was O(n_obs · |T|),
+    # minutes at GO scale; the rng call pattern (one permutation) and the
+    # surviving triple list are bit-identical
     heads = {h for h, _, _ in triples}
     tails = {t for _, _, t in triples}
     leaves = [i for i in terms if i in heads and i not in tails and not terms[i].obsolete]
     n_obs = int(len(terms) * obsolete_frac)
-    for ident in list(rng.permutation(leaves))[:n_obs]:
+    doomed = set(list(rng.permutation(leaves))[:n_obs])
+    for ident in doomed:
         meta = terms[ident]
         terms[ident] = TermMeta(meta.identifier, f"obsolete {meta.label}",
                                 meta.namespace, True, meta.definition)
-        triples = [t for t in triples if t[0] != ident and t[2] != ident]
+    if doomed:
+        triples = [t for t in triples
+                   if t[0] not in doomed and t[2] not in doomed]
 
     # --- rewire a fraction of is_a edges -------------------------------- #
     live = [i for i in terms if not terms[i].obsolete]
     ns_map = {i: terms[i].namespace for i in live}
+    # precomputed per-namespace live lists replace the O(n) same_ns scan
+    # per rewired edge.  ``same_ns`` excluded the head itself, so index j
+    # into it maps to the namespace list with the head's slot skipped —
+    # the draws, and therefore the releases, stay bit-identical
+    by_ns: Dict[str, List[str]] = {}
+    pos_in_ns: Dict[str, int] = {}
+    for c in live:
+        lst = by_ns.setdefault(ns_map[c], [])
+        pos_in_ns[c] = len(lst)
+        lst.append(c)
     new_triples: List[Triple] = []
     for h, r, t in triples:
         if r == "is_a" and rng.random() < rewire_frac:
-            same_ns = [c for c in live if ns_map[c] == ns_map.get(h) and c != h]
-            if same_ns:
-                t = same_ns[int(rng.integers(len(same_ns)))]
+            lst = by_ns.get(ns_map.get(h), [])
+            n_same = len(lst) - (1 if h in pos_in_ns else 0)
+            if n_same > 0:
+                j = int(rng.integers(n_same))
+                if h in pos_in_ns and j >= pos_in_ns[h]:
+                    j += 1
+                t = lst[j]
         new_triples.append((h, r, t))
     triples = new_triples
 

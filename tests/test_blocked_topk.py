@@ -1,0 +1,134 @@
+"""Block-tiled top-k (streaming + blocked-ref) vs the unblocked oracle.
+
+PR 8 makes the top-k hot path scale-oblivious: the table is walked in
+fixed-size row blocks with a running top-k merge, and per-row norms are
+folded into the in-kernel score so no host-normalized private copy is
+ever materialized. The contract is bit-parity with the one-shot oracle
+(`ref.topk_cosine_ref`) across the full edge grid — indices and valid
+exactly equal, scores allclose, entries past ``valid`` never compared.
+
+Edge classes required by the issue, each × both backends:
+  * k larger than the block size (running merge must carry > block state)
+  * N not a multiple of the block (final partial block, masked tail)
+  * exclusion landing in the final partial block
+  * k == N (every row surfaces, sentinel tail empty)
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _unit(n, d):
+    x = RNG.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _assert_parity(got, want, n, note):
+    s, i, v = (np.asarray(x) for x in got)
+    sr, ir, vr = (np.asarray(x) for x in want)
+    assert (v == vr).all(), (note, v, vr)
+    assert s.shape == sr.shape, (note, s.shape, sr.shape)
+    for r in range(s.shape[0]):
+        np.testing.assert_array_equal(i[r, :v[r]], ir[r, :v[r]], err_msg=note)
+        np.testing.assert_allclose(s[r, :v[r]], sr[r, :v[r]],
+                                   rtol=1e-5, atol=1e-5, err_msg=note)
+        assert (s[r, v[r]:] < -1e29).all(), note      # sentinel tail
+        assert (i[r, :v[r]] < n).all(), note          # no pad row leaks
+
+
+# (Q, N, d, k, block): the issue's edge grid.  block=8 with k=12 makes
+# k > block; N=21, block=8 leaves a 5-row final partial block; N=16,
+# block=8, k=16 is k == N across exactly two full blocks.
+GRID = [
+    (2, 21, 16, 12, 8),      # k > block AND partial final block
+    (3, 21, 16, 5, 8),       # partial final block, small k
+    (2, 16, 8, 16, 8),       # k == N, block-multiple N
+    (1, 7, 8, 10, 8),        # k > N (clamped), single partial block
+    (2, 64, 32, 64, 16),     # k == N across many blocks
+]
+
+
+@pytest.mark.parametrize("Q,N,d,k,block", GRID)
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_streaming_matches_oracle(Q, N, d, k, block, use_pallas):
+    """Host-streaming path (np table in, block_rows forced tiny)."""
+    q, e = _unit(Q, d), _unit(N, d)
+    # exclusion lands in the FINAL (possibly partial) block on even
+    # queries — a block-local index translation bug surfaces here
+    excl = np.array([N - 1 if i % 2 == 0 else -1 for i in range(Q)],
+                    np.int32)
+    got = ops.topk_cosine(q, e, k, exclude_rows=excl,
+                          use_pallas=use_pallas, block_rows=block)
+    want = ref.topk_cosine_ref(jnp.asarray(q), jnp.asarray(e), k,
+                               exclude_rows=jnp.asarray(excl))
+    note = f"stream pallas={use_pallas} Q={Q} N={N} k={k} block={block}"
+    _assert_parity(got, want, N, note)
+    i, v = np.asarray(got[1]), np.asarray(got[2])
+    for r in range(Q):
+        if r % 2 == 0:
+            assert N - 1 not in i[r, :v[r]], note     # exclusion held
+
+
+@pytest.mark.parametrize("Q,N,d,k,block", GRID)
+def test_blocked_ref_matches_oracle(Q, N, d, k, block):
+    """Device-side blocked ref (fori_loop + dynamic_slice) on jnp arrays."""
+    q, e = _unit(Q, d), _unit(N, d)
+    excl = jnp.array([N - 1 if i % 2 == 0 else -1 for i in range(Q)],
+                     jnp.int32)
+    got = ref.topk_cosine_blocked_ref(jnp.asarray(q), jnp.asarray(e), k,
+                                      exclude_rows=excl, block_n=block)
+    want = ref.topk_cosine_ref(jnp.asarray(q), jnp.asarray(e), k,
+                               exclude_rows=excl)
+    _assert_parity(got, want, N, f"blocked_ref N={N} k={k} block={block}")
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_norm_folding_matches_host_normalized(use_pallas):
+    """Raw table + per-row norms scores bit-identically (indices/valid)
+    to the oracle over the host-normalized copy — the kernel performs
+    the exact same float32 division the host would."""
+    Q, N, d, k, block = 3, 21, 16, 12, 8
+    q = _unit(Q, d)
+    raw = (RNG.standard_normal((N, d)) * 3.0).astype(np.float32)
+    nrm = np.linalg.norm(raw, axis=1).astype(np.float32)
+    excl = np.array([N - 1, -1, 4], np.int32)
+    got = ops.topk_cosine(q, raw, k, exclude_rows=excl,
+                          use_pallas=use_pallas, norms=nrm,
+                          block_rows=block)
+    unit_t = raw / np.maximum(nrm[:, None], 1e-12)
+    want = ref.topk_cosine_ref(jnp.asarray(q), jnp.asarray(unit_t), k,
+                               exclude_rows=jnp.asarray(excl))
+    _assert_parity(got, want, N, f"norms pallas={use_pallas}")
+
+
+def test_blocked_ref_norm_folding():
+    """Same norms-folding parity on the jnp blocked-ref path (the
+    sharded per-device local top-k uses this route)."""
+    Q, N, d, k, block = 2, 21, 16, 5, 8
+    q = _unit(Q, d)
+    raw = (RNG.standard_normal((N, d)) * 2.0).astype(np.float32)
+    nrm = np.linalg.norm(raw, axis=1).astype(np.float32)
+    got = ref.topk_cosine_blocked_ref(jnp.asarray(q), jnp.asarray(raw), k,
+                                      norms=jnp.asarray(nrm), block_n=block)
+    unit_t = raw / np.maximum(nrm[:, None], 1e-12)
+    want = ref.topk_cosine_ref(jnp.asarray(q), jnp.asarray(unit_t), k)
+    _assert_parity(got, want, N, "blocked_ref norms")
+
+
+def test_stream_stats_track_residency():
+    """The streaming driver records its peak single-block transfer —
+    strictly smaller than the table once N exceeds one block."""
+    Q, N, d, k, block = 2, 100, 16, 5, 16
+    q, e = _unit(Q, d), _unit(N, d)
+    ops.reset_stream_stats()
+    ops.topk_cosine(q, e, k, use_pallas=False, block_rows=block)
+    stats = ops.stream_stats
+    assert stats["calls"] == 1
+    assert stats["blocks"] == -(-N // block)
+    assert 0 < stats["peak_block_bytes"] < e.nbytes
+    # bound: block rows + their norms, float32
+    assert stats["peak_block_bytes"] <= block * (d + 1) * 4

@@ -136,6 +136,47 @@ def test_embedding_index_zero_copy_over_mmap(registry):
     assert np.allclose(got, eager, atol=1e-7)
 
 
+# --------------------- sorted-label sidecar (PR 8) --------------------- #
+def test_header_carries_sorted_labels(registry):
+    """Publish persists the sorted-normalized-label array so per-worker
+    load skips the per-process re-sort at 100k-label scale."""
+    from repro.checkpoint.store import norm_label
+    _, labels, _ = _publish(registry, "go", "2024-01")
+    d = registry.store._dir("go", "2024-01", "transe")
+    header = json.loads((d / RAW_HEADER).read_text())
+    assert header["sorted_labels"] == sorted({norm_label(x) for x in labels})
+    # and get_serving forwards it through meta
+    *_, meta = registry.get_serving("go", "transe")
+    assert meta["sorted_labels"] == header["sorted_labels"]
+
+
+def test_index_adopts_sidecar_sort_order(registry):
+    """The engine-built index uses the persisted array verbatim; answers
+    match an index that re-sorted from scratch."""
+    ids, labels, _ = _publish(registry, "go", "2024-01", seed=9)
+    engine = ServingEngine(registry)
+    idx = engine._index("go", "transe")
+    *_, meta = registry.get_serving("go", "transe")
+    assert idx._sorted_labels == meta["sorted_labels"]
+    _, _, table, norms, _ = registry.get_serving("go", "transe")
+    fresh = EmbeddingIndex(ids, labels, table, norms=norms)
+    assert idx._sorted_labels == fresh._sorted_labels
+    assert idx.autocomplete("go term 1", limit=5) == \
+        fresh.autocomplete("go term 1", limit=5)
+
+
+def test_stale_sidecar_length_falls_back_to_resort(registry):
+    """A sidecar whose length disagrees with the label set (e.g. written
+    by a pre-dedup publisher) is ignored, not trusted."""
+    ids, labels, _ = _publish(registry, "go", "2024-01")
+    _, _, table, norms, _ = registry.get_serving("go", "transe")
+    bogus = ["aaa"]                       # wrong length on purpose
+    idx = EmbeddingIndex(ids, labels, table, norms=norms,
+                         sorted_labels=bogus)
+    fresh = EmbeddingIndex(ids, labels, table, norms=norms)
+    assert idx._sorted_labels == fresh._sorted_labels
+
+
 # ---------------------------- seal markers ---------------------------- #
 def test_seal_and_sealed_versions(registry):
     _publish(registry, "go", "2024-01")

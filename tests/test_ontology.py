@@ -44,6 +44,44 @@ def test_obo_roundtrip(tiny_go, tmp_path):
         assert kg2.terms[ident].label == tiny_go.terms[ident].label
 
 
+def test_obo_stream_parse_matches_whole_string(tiny_go):
+    """parse_obo_stream over a line generator == parse_obo over the full
+    text — the streaming reader is the same parser, not a second one."""
+    text = obo.write_obo(tiny_go, header_version="2023-01-01")
+    kg_stream = obo.parse_obo_stream(iter(text.splitlines()))
+    kg_whole = obo.parse_obo(text)
+    assert kg_stream.checksum() == kg_whole.checksum() == tiny_go.checksum()
+
+
+def test_save_obo_bytes_match_write_obo(tiny_go, tmp_path):
+    """The line-streaming writer frames separators exactly like the
+    whole-string join — release checksums stay byte-stable."""
+    p = tmp_path / "go.obo"
+    obo.save_obo(tiny_go, p, header_version="2023-01-01")
+    assert p.read_text() == obo.write_obo(tiny_go, header_version="2023-01-01")
+
+
+@pytest.mark.slow
+def test_obo_roundtrip_100k_terms(tmp_path):
+    """GO-scale release artifact: 100k terms stream-serialize and
+    stream-parse back checksum-identical, inside a wall-time budget
+    (generation excluded — only parse/serialize are under test)."""
+    import time
+    kg = generate(GO_SPEC, seed=0, n_terms=100_000)
+    p = tmp_path / "go-scale.obo"
+    t0 = time.perf_counter()
+    obo.save_obo(kg, p, header_version="2025-01-01")
+    t_save = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    kg2 = obo.load_obo(p)
+    t_load = time.perf_counter() - t0
+    assert len(kg2.terms) == 100_000
+    assert kg2.checksum() == kg.checksum()
+    # budget: tens of MB of OBO text must stream in seconds, not minutes
+    assert t_save < 30.0, f"serialize took {t_save:.1f}s"
+    assert t_load < 60.0, f"parse took {t_load:.1f}s"
+
+
 def test_evolve_changes_checksum_and_adds_terms(tiny_go):
     kg2 = evolve(tiny_go, GO_SPEC, seed=11)
     assert kg2.checksum() != tiny_go.checksum()

@@ -68,6 +68,37 @@ SCRIPT = textwrap.dedent("""
                     assert N - 1 not in i[r, :v[r]]      # exclusion held
             checked += 1
 
+    # raw table + folded norms (PR 8): shard_table_raw ships raw rows and
+    # per-row norms; in-kernel normalization must match the oracle over a
+    # host-normalized copy exactly (the kernel performs the same float32
+    # division), across the same edge grid and both backends
+    raw_checked = 0
+    for use_pallas in (False, True):
+        for (Q, N, d, k) in (PALLAS_GRID if use_pallas else GRID):
+            q = unit(Q, d)
+            raw = (rng.standard_normal((N, d)) * 3.0).astype(np.float32)
+            nrm = np.linalg.norm(raw, axis=1).astype(np.float32)
+            excl = jnp.array([N - 1 if i % 2 == 0 else -1 for i in range(Q)],
+                             jnp.int32)
+            es, ns, n_valid = ops.shard_table_raw(raw, nrm, mesh)
+            assert es.shape[0] % 4 == 0 and n_valid == N
+            s, i, v = ops.topk_cosine_sharded(
+                jnp.asarray(q), es, k, exclude_rows=excl, mesh=mesh,
+                n_valid=n_valid, use_pallas=use_pallas, norms=ns)
+            unit_t = raw / np.maximum(nrm[:, None], 1e-12)
+            sr, ir, vr = ref.topk_cosine_ref(jnp.asarray(q),
+                                             jnp.asarray(unit_t), k,
+                                             exclude_rows=excl)
+            s, i, v = np.asarray(s), np.asarray(i), np.asarray(v)
+            sr, ir, vr = np.asarray(sr), np.asarray(ir), np.asarray(vr)
+            assert (v == vr).all(), (use_pallas, Q, N, d, k, v, vr)
+            for r in range(Q):
+                np.testing.assert_allclose(s[r, :v[r]], sr[r, :v[r]],
+                                           rtol=1e-5, atol=1e-5)
+                np.testing.assert_array_equal(i[r, :v[r]], ir[r, :v[r]])
+                assert (i[r, :v[r]] < N).all()
+            raw_checked += 1
+
     # end-to-end: a sharded ServingEngine serves the same answers
     import tempfile
     from repro.core.registry import EmbeddingRegistry
@@ -84,7 +115,8 @@ SCRIPT = textwrap.dedent("""
         b = solo.closest_concepts("go", "transe", query, k=k)
         assert [(c.identifier, round(c.score, 5)) for c in a] == \\
                [(c.identifier, round(c.score, 5)) for c in b]
-    print(json.dumps({"devices": jax.device_count(), "checked": checked}))
+    print(json.dumps({"devices": jax.device_count(), "checked": checked,
+                      "raw_checked": raw_checked}))
 """)
 
 
@@ -100,3 +132,4 @@ def test_sharded_topk_matches_ref_on_4_devices():
     report = json.loads(out.stdout.strip().splitlines()[-1])
     assert report["devices"] == 4
     assert report["checked"] == 9           # 6 ref + 3 pallas grid points
+    assert report["raw_checked"] == 9       # same grid, raw table + norms
