@@ -50,11 +50,19 @@ def run(fast: bool = False, use_pallas: bool = False,
         registry.publish("go", "2025-01", "transe", ids, labels, emb,
                          ontology_checksum="bench", hyperparameters={"dim": d})
         engine = ServingEngine(registry, use_pallas=use_pallas)
-        engine.closest_concepts("go", "transe", ids[0], k=k)   # build index
+        # the "solo" baseline must measure the kernel path, not the
+        # gateway: engine.closest_concepts delegates to the gateway since
+        # PR 4, whose result cache (PR 7) turns this bench's repeated
+        # identical queries into dict hits — so the baseline goes
+        # straight at the index (cache-off, scheduler-off), one query
+        # per kernel call, which is what "no batching" actually costs
+        idx = engine._index("go", "transe")
+        idx.top_k([ids[0]], k=k)               # build index + warm jit
 
         out = {"n_classes": n, "dim": d, "k": k,
                "path": "pallas-interpret" if use_pallas else "ref",
-               "repeats": repeats, "buckets": []}
+               "repeats": repeats, "solo_baseline": "index-direct",
+               "buckets": []}
         sched = BatchScheduler(engine, max_batch=max(buckets))
         for b in buckets:
             queries = [ids[int(i)] for i in rng.integers(0, n, b)]
@@ -62,13 +70,13 @@ def run(fast: bool = False, use_pallas: bool = False,
             for q in queries:
                 sched.submit(TopKRequest("go", "transe", q, k))
             sched.flush()
-            engine.closest_concepts("go", "transe", queries[0], k=k)
+            idx.top_k([queries[0]], k=k)
 
             solo_lat = []
             for _ in range(repeats):
                 t0 = time.perf_counter()
                 for q in queries:
-                    engine.closest_concepts("go", "transe", q, k=k)
+                    idx.top_k([q], k=k)
                 solo_lat.append(time.perf_counter() - t0)
             sched_lat = []
             for _ in range(repeats):

@@ -59,6 +59,13 @@ corresponds to a system capability it claims:
                       sub-linear q/s degradation
                       (benchmarks/bench_scale.py), written to
                       results/BENCH_scale.json
+  B13 jobs            async batch-analytics jobs: bulk kNN join byte-
+                      identical to the serial per-query oracle,
+                      interactive p99 <= 2x quiescent while a bulk job
+                      runs (gated full-size, recorded at --fast), and
+                      queue-overflow 429 + Retry-After in < 5ms median
+                      (benchmarks/bench_jobs.py), written to
+                      results/BENCH_jobs.json
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run                # full benchmarks
@@ -299,8 +306,13 @@ def run_smoke() -> int:
     cch = bench_cache.run(fast=True)
     bench_cache.write_results(
         {bench_cache.section_key(True) + "_smoke": cch})
+    print("[smoke] jobs bucket: bulk join parity + 429 fast-reject")
+    from benchmarks import bench_jobs
+    jbs = bench_jobs.run(fast=True)
+    bench_jobs.write_results(
+        {bench_jobs.section_key(True) + "_smoke": jbs})
     ok = (tests.returncode == 0 and s16 >= FLOOR and upd["pass"]
-          and gwy["pass"] and cch["pass"])
+          and gwy["pass"] and cch["pass"] and jbs["pass"])
     print(f"[smoke] {'PASS' if ok else 'FAIL'}: tests "
           f"exit={tests.returncode}, 16-thread speedup={s16:.2f}x "
           f"(floor {FLOOR}x), warm update "
@@ -311,7 +323,9 @@ def run_smoke() -> int:
           f"{bench_gateway.async_ratio(gwy):.2f}x threaded "
           f"(floors {bench_gateway.FLOOR}x / {bench_gateway.ASYNC_RATIO}x), "
           f"cache {bench_cache.floor_speedup(cch):.2f}x "
-          f"(floor {cch['floor']}x)")
+          f"(floor {cch['floor']}x), jobs "
+          f"{'PASS' if jbs['pass'] else 'FAIL'} "
+          f"(429 median {jbs['overflow']['reject_p50_ms']:.3f}ms)")
     return 0 if ok else 1
 
 
@@ -323,7 +337,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["kge", "serving", "update", "walks", "sched",
                              "concurrent", "gateway", "http", "http-mp",
-                             "cache", "scale"])
+                             "cache", "scale", "jobs"])
     args = ap.parse_args()
 
     if args.fast and args.only is None:
@@ -403,6 +417,14 @@ def main():
             bench_scale.write_results(
                 {bench_scale.section_key(args.fast): scl})
             report["scale"] = scl
+        if args.only in (None, "jobs"):
+            print("[B13] async batch-analytics jobs (join parity, p99 "
+                  "under fire, 429 fast-reject)")
+            from benchmarks import bench_jobs
+            jbs = bench_jobs.run(fast=args.fast)
+            bench_jobs.write_results(
+                {bench_jobs.section_key(args.fast): jbs})
+            report["jobs"] = jbs
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

@@ -29,6 +29,7 @@ from ..core.serving import SchedulerError, Ticket
 from .gateway import TICKET_ROUTES, Gateway, _error_from_ticket
 from .schema import (ApiError, AutocompleteResponse, ClosestConceptsRequest,
                      ClosestConceptsResponse, DownloadPage, HealthResponse,
+                     JobListResponse, JobResultPage, JobStatusResponse,
                      LineageResponse, SimilarityRequest, SimilarityResponse,
                      StatsResponse, VectorResponse, VersionsResponse)
 
@@ -234,6 +235,56 @@ class AsyncGateway:
     async def lineage(self, ontology: str,
                       version: Optional[str] = None) -> LineageResponse:
         return await self._blocking(self.gateway.lineage, ontology, version)
+
+    # --------------------------- batch jobs ---------------------------- #
+    # submit/poll/result/cancel are thin executor hops: the manager's own
+    # locking is cheap, but submit validates coordinates against the
+    # store (disk metadata) and result_rows may read a rows file, so none
+    # of them belong on the event loop.
+    async def submit_job(self, kind: str, ontology: str, *,
+                         model: Optional[str] = None,
+                         version: Optional[str] = None,
+                         version_b: Optional[str] = None,
+                         classes: Optional[Sequence[str]] = None,
+                         k: int = 10,
+                         models: Optional[Sequence[str]] = None,
+                         sample: Optional[int] = None) -> JobStatusResponse:
+        return await self._blocking(
+            self.gateway.submit_job, kind, ontology, model=model,
+            version=version, version_b=version_b, classes=classes, k=k,
+            models=models, sample=sample)
+
+    async def job_status(self, job_id: str) -> JobStatusResponse:
+        return await self._blocking(self.gateway.job_status, job_id)
+
+    async def job_result(self, job_id: str, *, offset: int = 0,
+                         limit: int = 1000) -> JobResultPage:
+        return await self._blocking(self.gateway.job_result, job_id,
+                                    offset=offset, limit=limit)
+
+    async def job_cancel(self, job_id: str) -> JobStatusResponse:
+        return await self._blocking(self.gateway.job_cancel, job_id)
+
+    async def jobs_list(self) -> JobListResponse:
+        return await self._blocking(self.gateway.jobs_list)
+
+    async def job_wait(self, job_id: str, *, poll_s: float = 0.02,
+                       timeout: Optional[float] = None) -> JobStatusResponse:
+        """Poll until the job reaches a terminal state, yielding the
+        event loop between polls (unlike the sync ``Gateway.job_wait``,
+        which parks its thread)."""
+        loop = asyncio.get_running_loop()
+        deadline = None if timeout is None else loop.time() + timeout
+        while True:
+            status = await self.job_status(job_id)
+            if status.state in ("DONE", "FAILED", "CANCELLED"):
+                return status
+            if deadline is not None and loop.time() >= deadline:
+                raise ApiError(
+                    "TIMEOUT", f"job {job_id} unfinished after {timeout}s",
+                    details={"job_id": job_id, "state": status.state,
+                             "progress": status.progress})
+            await asyncio.sleep(poll_s)
 
     # ------------------------------ wire ------------------------------- #
     async def _handle_sim_wire(self, req: SimilarityRequest):

@@ -35,6 +35,8 @@ CODE_STATUS: Dict[str, int] = {
     "OVERLOADED": 429,               # admission control: intake bound hit
     "SHUTTING_DOWN": 503,
     "INTERNAL": 500,
+    "JOB_NOT_FOUND": 404,            # unknown (or already-evicted) job id
+    "JOB_CANCELLED": 409,            # results requested for a cancelled job
 }
 
 #: legacy exception type per code — what the deprecated ServingEngine
@@ -46,6 +48,7 @@ _LEGACY = {
     "BAD_REQUEST": ValueError, "TIMEOUT": TimeoutError,
     "OVERLOADED": RuntimeError,
     "SHUTTING_DOWN": RuntimeError, "INTERNAL": RuntimeError,
+    "JOB_NOT_FOUND": KeyError, "JOB_CANCELLED": RuntimeError,
 }
 
 
@@ -162,6 +165,56 @@ class LineageRequest:
     version: Optional[str] = None    # None = latest
 
 
+@dataclasses.dataclass
+class JobSubmitRequest:
+    """Submit one async analytics job (``POST /v1/jobs/submit``).
+
+    ``kind`` selects the workload:
+
+    * ``"knn-join"`` — all-pairs top-``k`` neighbors for ``classes``
+      (required, non-empty) under (ontology, model[, version]);
+    * ``"drift"`` — per-entity neighborhood churn between ``version``
+      (older; default: the release before ``version_b``) and
+      ``version_b`` (newer; default: latest);
+    * ``"compare"`` — per-model eval metrics for ``models`` (default:
+      every model published under the resolved version), optionally
+      subsampling the eval split to ``sample`` triples.
+    """
+    kind: str
+    ontology: str
+    model: Optional[str] = None      # knn-join/drift: required
+    version: Optional[str] = None
+    version_b: Optional[str] = None  # drift only: newer release
+    classes: Optional[List[str]] = None
+    k: int = 10
+    models: Optional[List[str]] = None
+    sample: Optional[int] = None
+
+
+@dataclasses.dataclass
+class JobStatusRequest:
+    job_id: str
+
+
+@dataclasses.dataclass
+class JobResultRequest:
+    """Cursor-paginated job results — same contract as ``download``:
+    rows ``[offset, offset+limit)`` of the finished job's result table."""
+    job_id: str
+    offset: int = 0
+    limit: int = 1000
+
+
+@dataclasses.dataclass
+class JobCancelRequest:
+    job_id: str
+
+
+@dataclasses.dataclass
+class JobListRequest:
+    pass
+
+
 # --------------------------------------------------------------------- #
 # responses
 # --------------------------------------------------------------------- #
@@ -271,6 +324,60 @@ class VersionsResponse:
 
 
 @dataclasses.dataclass
+class JobStatusResponse:
+    """One job's lifecycle snapshot (also the submit acknowledgement).
+
+    ``state`` is one of PENDING / RUNNING / DONE / FAILED / CANCELLED;
+    ``progress`` is a monotone fraction in [0, 1] (1.0 only at DONE);
+    ``total`` is the expected result-row count once known; ``wall_s``
+    is populated on terminal states; ``owner_pid`` names the worker
+    process the job is pinned to (poll any worker — non-owners answer
+    from the shared job state)."""
+    job_id: str
+    kind: str
+    state: str
+    progress: float
+    ontology: str
+    model: Optional[str] = None
+    version: Optional[str] = None
+    version_b: Optional[str] = None
+    k: Optional[int] = None
+    submitted_at: float = 0.0
+    wall_s: Optional[float] = None
+    total: Optional[int] = None
+    error: Optional[str] = None
+    summary: Optional[Dict[str, Any]] = None
+    owner_pid: int = 0
+
+
+@dataclasses.dataclass
+class JobListResponse:
+    jobs: List[JobStatusResponse]
+
+
+@dataclasses.dataclass
+class JobResultPage:
+    """One page of a DONE job's result table. Mirrors the
+    :class:`DownloadPage` cursor contract (effective ``limit`` vs
+    ``requested_limit``, ``next_offset`` None on the final page) so the
+    HTTP layer's ETag / If-None-Match / chunked-streaming machinery
+    applies unchanged: a finished job's rows are immutable, so
+    ``(job_id, offset, limit, requested_limit)`` determine the page's
+    exact bytes. Row shape per kind — ``knn-join``:
+    ``[identifier, [[neighbor_id, score], ...]]``; ``drift``:
+    ``[identifier, jaccard]``; ``compare``: ``[model, metrics_dict]``."""
+    job_id: str
+    kind: str
+    offset: int
+    limit: int
+    total: int
+    rows: List[List[Any]]
+    next_offset: Optional[int]
+    requested_limit: Optional[int] = None
+    etag: Optional[str] = None
+
+
+@dataclasses.dataclass
 class LineageResponse:
     """Per-model lineage metadata of one (ontology, version): how each
     snapshot was produced ({"parent_version", "mode", "delta"} — PR 3),
@@ -293,6 +400,11 @@ _TYPES = {
     StatsRequest: "stats_request",
     VersionsRequest: "versions_request",
     LineageRequest: "lineage_request",
+    JobSubmitRequest: "job_submit_request",
+    JobStatusRequest: "job_status_request",
+    JobResultRequest: "job_result_request",
+    JobCancelRequest: "job_cancel_request",
+    JobListRequest: "job_list_request",
     ConceptHit: "concept_hit",
     VectorResponse: "vector_response",
     SimilarityResponse: "similarity_response",
@@ -303,11 +415,15 @@ _TYPES = {
     StatsResponse: "stats_response",
     VersionsResponse: "versions_response",
     LineageResponse: "lineage_response",
+    JobStatusResponse: "job_status_response",
+    JobListResponse: "job_list_response",
+    JobResultPage: "job_result_page",
 }
 _BY_NAME = {name: cls for cls, name in _TYPES.items()}
 
 #: list-of-dataclass fields that from_wire must reconstruct
-_NESTED = {ClosestConceptsResponse: {"results": ConceptHit}}
+_NESTED = {ClosestConceptsResponse: {"results": ConceptHit},
+           JobListResponse: {"jobs": JobStatusResponse}}
 
 
 def payload_to(cls, payload: Dict[str, Any]):

@@ -253,7 +253,8 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
                  stats_interval_s: float,
                  max_pending: Optional[int] = None,
                  result_cache_entries: int = 4096,
-                 result_cache_bytes: int = 32 << 20) -> None:
+                 result_cache_bytes: int = 32 << 20,
+                 max_jobs_queued: int = 8) -> None:
     """Body of one worker process (runs post-fork; exits via os._exit).
 
     Builds the full serving stack from scratch — registry, engine,
@@ -270,10 +271,16 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
 
     registry = EmbeddingRegistry(registry_root)
     engine = ServingEngine(registry, cache_capacity=cache_capacity)
+    # jobs_state_dir is shared across the pool: each worker's JobManager
+    # mirrors its jobs there, so any worker can answer status/result/
+    # cancel for a job pinned to a sibling — and report a SIGKILL'd
+    # sibling's in-flight jobs as FAILED (the orphan rule)
     gw = Gateway(engine, max_batch=max_batch, flush_after_ms=flush_after_ms,
                  max_pending=max_pending,
                  result_cache_entries=result_cache_entries,
-                 result_cache_bytes=result_cache_bytes)
+                 result_cache_bytes=result_cache_bytes,
+                 max_jobs_queued=max_jobs_queued,
+                 jobs_state_dir=state_dir / "jobs")
 
     if inherited is not None:
         sock = inherited                      # fallback: contended accept
@@ -400,6 +407,7 @@ class WorkerPool:
                  max_pending: Optional[int] = None,
                  result_cache_entries: int = 4096,
                  result_cache_bytes: int = 32 << 20,
+                 max_jobs_queued: int = 8,
                  state_dir: Optional[str | Path] = None,
                  use_reuseport: Optional[bool] = None,
                  watch_interval_s: float = 0.25,
@@ -418,6 +426,7 @@ class WorkerPool:
         self.max_pending = max_pending
         self.result_cache_entries = result_cache_entries
         self.result_cache_bytes = result_cache_bytes
+        self.max_jobs_queued = max_jobs_queued
         self.restart = restart
         self.watch_interval_s = watch_interval_s
         self.stats_interval_s = stats_interval_s
@@ -496,7 +505,8 @@ class WorkerPool:
                     stats_interval_s=self.stats_interval_s,
                     max_pending=self.max_pending,
                     result_cache_entries=self.result_cache_entries,
-                    result_cache_bytes=self.result_cache_bytes)
+                    result_cache_bytes=self.result_cache_bytes,
+                    max_jobs_queued=self.max_jobs_queued)
             finally:
                 # _worker_main exits via its own os._exit(0); reaching
                 # here means it raised before serving
@@ -631,6 +641,9 @@ def main(argv: Optional[List[str]] = None) -> None:
                     help="result-cache entry bound per worker (0 disables)")
     ap.add_argument("--cache-bytes", type=int, default=32 << 20,
                     help="result-cache byte bound per worker (0 disables)")
+    ap.add_argument("--max-jobs-queued", type=int, default=8,
+                    help="per-worker batch-job queue bound; past it "
+                         "submissions fast-reject with HTTP 429")
     ap.add_argument("--no-reuseport", action="store_true",
                     help="force the inherited-listener fallback")
     args = ap.parse_args(argv)
@@ -641,6 +654,7 @@ def main(argv: Optional[List[str]] = None) -> None:
         max_pending=args.max_pending,
         result_cache_entries=args.cache_entries,
         result_cache_bytes=args.cache_bytes,
+        max_jobs_queued=args.max_jobs_queued,
         state_dir=args.state_dir,
         use_reuseport=False if args.no_reuseport else None,
         watch_interval_s=args.watch_interval_ms / 1e3,

@@ -250,6 +250,25 @@ class SnapshotStore:
         d = self._dir(ontology, version, model)
         return (d / "params.npz").exists() and (d / "params_vocab.json").exists()
 
+    # ------------------- cached eval metrics (compare) ----------------- #
+    def save_eval(self, ontology: str, version: str, model: str,
+                  payload: Dict[str, Any]) -> Path:
+        """Cache one model's eval metrics next to its snapshot so repeat
+        ``compare`` jobs are free — the metrics of a published (immutable)
+        snapshot never change, so the cache needs no invalidation."""
+        d = self._dir(ontology, version, model)
+        d.mkdir(parents=True, exist_ok=True)
+        _atomic_write_text(d / "eval.json",
+                           json.dumps(payload, sort_keys=True))
+        return d / "eval.json"
+
+    def load_eval(self, ontology: str, version: str, model: str) -> Dict[str, Any]:
+        d = self._dir(ontology, version, model)
+        return json.loads((d / "eval.json").read_text())
+
+    def has_eval(self, ontology: str, version: str, model: str) -> bool:
+        return (self._dir(ontology, version, model) / "eval.json").exists()
+
     # ----------------- parsed-release snapshots (deltas) --------------- #
     def save_graph(self, ontology: str, version: str, kg) -> Path:
         """Persist the parsed release at the version level so the next

@@ -328,6 +328,48 @@ class EmbeddingIndex:
             out.append(lst)
         return out
 
+    def knn_join_rows(self, rows: Sequence[int], k: int = 10,
+                      exclude_self: bool = True, slab: int = 256):
+        """All-pairs kNN join as a generator of ``(start, hits)`` slabs.
+
+        Walks ``rows`` in fixed ``slab``-sized query blocks through the
+        slab-iterated join kernel (streaming table residency on the host
+        path), yielding each block's ``List[List[ClosestConcept]]`` as
+        soon as it is scored.  Results are bit-identical to calling
+        :meth:`top_k_rows` one row at a time; the generator boundary is
+        where long-running jobs publish progress, observe cancellation,
+        and yield the process to interactive traffic.
+        """
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        rows = np.asarray(list(rows), dtype=np.int32)
+        excl = rows if exclude_self else np.full(len(rows), -1, np.int32)
+        from ..kernels import ops as kops
+        if self.mesh is not None:
+            # sharded tables stay device-resident: reuse the sharded
+            # batch path per slab (same merge contract, same results)
+            for start in range(0, len(rows), slab):
+                part = rows[start:start + slab]
+                yield start, self.top_k_rows(
+                    part, k, exclude_self=exclude_self)
+            return
+        qvec = self.unit_rows(rows)
+        for start, scores, idx, valid in kops.topk_cosine_join(
+                qvec, self.embeddings, int(k), exclude_rows=excl,
+                norms=self.norms, use_pallas=self.use_pallas,
+                query_block_rows=slab, block_rows=self.block_rows):
+            out: List[List[ClosestConcept]] = []
+            for qi in range(scores.shape[0]):
+                lst: List[ClosestConcept] = []
+                for score, j in zip(scores[qi, :valid[qi]],
+                                    idx[qi, :valid[qi]]):
+                    ident = self.entity_ids[int(j)]
+                    lst.append(ClosestConcept(
+                        ident, self.labels[int(j)], float(score),
+                        self.url_prefix + ident))
+                out.append(lst)
+            yield start, out
+
 
 class LRUIndexCache:
     """Bounded LRU of built ``EmbeddingIndex`` objects.

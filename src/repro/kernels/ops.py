@@ -122,8 +122,6 @@ def _topk_stream(q_unit, e_table: np.ndarray, k: int, exclude_rows,
     limit = jnp.int32(n)
     peak = 0
     n_blocks = 0
-    blk_host = np.zeros((bs, d), np.float32)
-    nrm_host = np.ones((bs,), np.float32)
     for start in range(0, n, bs):
         rows = min(bs, n - start)
         if use_pallas:
@@ -145,14 +143,16 @@ def _topk_stream(q_unit, e_table: np.ndarray, k: int, exclude_rows,
                                          jnp.int32(start), k=k_c)
             peak = max(peak, rows * d * 4 + (rows * 4 if has_norms else 0))
         else:
-            # fixed-size slab (tail zero-padded) → one jitted step shape
+            # fixed-size slab (tail zero-padded) → one jitted step shape.
+            # The staging arrays MUST be freshly allocated per block:
+            # jnp.asarray can adopt an aligned numpy buffer zero-copy on
+            # CPU, so a reused scratch array would be rewritten under the
+            # previous (async-dispatched) step and merge the wrong rows.
+            blk_host = np.zeros((bs, d), np.float32)
             blk_host[:rows] = e_table[start:start + rows]
-            if rows < bs:
-                blk_host[rows:] = 0.0
+            nrm_host = np.ones((bs,), np.float32)
             if has_norms:
                 nrm_host[:rows] = norms_np[start:start + rows]
-                if rows < bs:
-                    nrm_host[rows:] = 1.0
             run_s, run_i = _stream_step_ref(
                 q, jnp.asarray(blk_host), jnp.asarray(nrm_host),
                 jnp.int32(start), limit, excl, run_s, run_i,
@@ -200,6 +200,52 @@ def topk_cosine(q_unit, e_table, k: int,
             q_unit, e_table, k, exclude_rows=exclude_rows, norms=norms,
             block_n=min(SHARD_BLOCK_N, max(128, e_table.shape[0])))
     return ref.topk_cosine_ref(q_unit, e_table, k, exclude_rows=exclude_rows)
+
+
+def topk_cosine_join(q_unit, e_table, k: int,
+                     exclude_rows=None,
+                     norms=None,
+                     use_pallas: Optional[bool] = None,
+                     query_block_rows: int = 256,
+                     block_rows: Optional[int] = None):
+    """Slab-iterated all-pairs kNN join: generator over query slabs.
+
+    Walks the (Q, d) query block in fixed ``query_block_rows`` slabs and
+    runs each through :func:`topk_cosine` (streaming table residency when
+    ``e_table`` is a host array), yielding ``(start, scores, indices,
+    valid)`` with the slab's results trimmed to its real rows.  Peak
+    allocation is O(query_block · table_block + query_block · k) no matter
+    how long the join list is, and the caller regains control between
+    slabs — the job executor uses that boundary to publish progress,
+    observe cancellation, and yield to interactive traffic.
+
+    The final partial slab is zero-padded up to ``query_block_rows``
+    (pad exclusions −1) so every slab reuses one compiled step shape;
+    pad rows are dropped before yielding.  Row results are bit-identical
+    to a serial per-query :func:`topk_cosine` call: each output row of
+    the slab matmul accumulates independently of its neighbors.
+    """
+    q = np.asarray(q_unit, np.float32)
+    qn = q.shape[0]
+    s = max(1, int(query_block_rows))
+    if exclude_rows is None:
+        excl_np = np.full((qn,), -1, np.int32)
+    else:
+        excl_np = np.asarray(exclude_rows, np.int32)
+    for start in range(0, qn, s):
+        rows = min(s, qn - start)
+        q_slab = q[start:start + rows]
+        e_slab = excl_np[start:start + rows]
+        if rows < s:
+            q_slab = np.concatenate(
+                [q_slab, np.zeros((s - rows, q.shape[1]), np.float32)])
+            e_slab = np.concatenate(
+                [e_slab, np.full((s - rows,), -1, np.int32)])
+        sc, ix, va = topk_cosine(q_slab, e_table, k, exclude_rows=e_slab,
+                                 use_pallas=use_pallas, norms=norms,
+                                 block_rows=block_rows)
+        yield (start, np.asarray(sc)[:rows], np.asarray(ix)[:rows],
+               np.asarray(va)[:rows])
 
 
 def mesh_data_shards(mesh, axis: str = "data") -> int:

@@ -68,6 +68,10 @@ def main():
                          "(0 disables the cache)")
     ap.add_argument("--cache-bytes", type=int, default=32 << 20,
                     help="result-cache wire-byte bound (0 disables)")
+    ap.add_argument("--max-jobs-queued", type=int, default=8,
+                    help="batch-job queue bound (per worker); past it "
+                         "job submissions fast-reject with OVERLOADED / "
+                         "HTTP 429 + Retry-After")
     args = ap.parse_args()
 
     from repro.api import Gateway
@@ -104,7 +108,8 @@ def main():
                           flush_after_ms=args.flush_after_ms,
                           max_pending=args.max_pending,
                           result_cache_entries=args.cache_entries,
-                          result_cache_bytes=args.cache_bytes)
+                          result_cache_bytes=args.cache_bytes,
+                          max_jobs_queued=args.max_jobs_queued)
         pool.start()
         pool.wait_ready()
         base = pool.url
@@ -114,6 +119,10 @@ def main():
         print(f"[serve]   curl '{base}/health'")
         print(f"[serve]   curl '{base}/closest-concepts/{args.ontology}/"
               f"{args.model}?query=GO:0000001&k=5'")
+        print(f"[serve]   curl -X POST '{base}/jobs/submit' -d "
+              f"'{{\"kind\": \"knn-join\", \"ontology\": \"{args.ontology}\", "
+              f"\"model\": \"{args.model}\", "
+              f"\"classes\": [\"GO:0000001\"], \"k\": 5}}'")
         print(f"[serve]   curl '{base}/stats'   # merged across workers")
         try:
             threading.Event().wait()
@@ -129,7 +138,8 @@ def main():
                  flush_after_ms=args.flush_after_ms,
                  max_pending=args.max_pending,
                  result_cache_entries=args.cache_entries,
-                 result_cache_bytes=args.cache_bytes)
+                 result_cache_bytes=args.cache_bytes,
+                 max_jobs_queued=args.max_jobs_queued)
 
     if args.http is not None:
         from repro.api.http import serve_http
@@ -151,6 +161,12 @@ def main():
                 f"?stream=true'   # chunked full table",
                 f"curl '{base}/autocomplete/{args.ontology}/{args.model}"
                 f"?prefix=term'",
+                f"curl -X POST '{base}/jobs/submit' -d '{{\"kind\": "
+                f"\"knn-join\", \"ontology\": \"{args.ontology}\", "
+                f"\"model\": \"{args.model}\", \"classes\": [\"{q}\"], "
+                f"\"k\": 5}}'   # -> {{job_id}}; poll /jobs/{{job_id}}",
+                f"curl '{base}/jobs/JOB_ID/result?stream=true'"
+                f"   # chunked rows once DONE",
                 f"curl '{base}/stats'   # per-route latency histograms"):
             print(f"[serve]   {line}")
         try:

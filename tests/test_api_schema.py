@@ -80,7 +80,8 @@ def test_every_code_has_status_and_legacy_mapping():
     assert set(schema.CODE_STATUS) == {
         "UNKNOWN_ONTOLOGY", "UNKNOWN_MODEL", "UNKNOWN_VERSION",
         "UNKNOWN_CLASS", "NOT_FOUND", "BAD_REQUEST", "TIMEOUT",
-        "OVERLOADED", "SHUTTING_DOWN", "INTERNAL"}
+        "OVERLOADED", "SHUTTING_DOWN", "INTERNAL",
+        "JOB_NOT_FOUND", "JOB_CANCELLED"}
     for code in schema.CODE_STATUS:
         err = ApiError(code, "m")
         assert err.status == schema.CODE_STATUS[code]
@@ -93,6 +94,10 @@ def test_every_code_has_status_and_legacy_mapping():
     assert isinstance(ApiError("SHUTTING_DOWN", "m").legacy(), RuntimeError)
     assert isinstance(ApiError("OVERLOADED", "m").legacy(), RuntimeError)
     assert ApiError("OVERLOADED", "m").status == 429
+    assert isinstance(ApiError("JOB_NOT_FOUND", "m").legacy(), KeyError)
+    assert ApiError("JOB_NOT_FOUND", "m").status == 404
+    assert isinstance(ApiError("JOB_CANCELLED", "m").legacy(), RuntimeError)
+    assert ApiError("JOB_CANCELLED", "m").status == 409
     with pytest.raises(ValueError):
         ApiError("NO_SUCH_CODE", "m")
 
