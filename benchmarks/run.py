@@ -66,6 +66,10 @@ corresponds to a system capability it claims:
                       queue-overflow 429 + Retry-After in < 5ms median
                       (benchmarks/bench_jobs.py), written to
                       results/BENCH_jobs.json
+  B14 analysis        repo-native invariant analyzer (repro.analysis)
+                      over src/: must finish in < 10 s with zero
+                      unsuppressed findings; full report written to
+                      results/ANALYSIS_report.json
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run                # full benchmarks
@@ -267,6 +271,41 @@ def bench_walks(fast: bool) -> dict:
 
 
 # ===================================================================== #
+def bench_analysis() -> dict:
+    """B14: the invariant analyzer must stay fast and the tree clean.
+
+    Runs repro.analysis in-process over src/ against the committed
+    baseline and writes the full report to results/ANALYSIS_report.json
+    (the CI artifact). Pass = zero unsuppressed findings, no stale
+    baseline entries, wall time under 10 s.
+    """
+    from repro.analysis import run_analysis
+
+    budget_s = 10.0
+    report = run_analysis([REPO / "src"], root=REPO,
+                          baseline=REPO / "analysis_baseline.json")
+    out = {
+        "files": report.files,
+        "findings": len(report.findings),
+        "suppressed": len(report.suppressed),
+        "baselined": len(report.baselined),
+        "stale_baseline": len(report.stale_baseline),
+        "elapsed_s": round(report.elapsed_s, 2),
+        "budget_s": budget_s,
+        "pass": report.ok and report.elapsed_s < budget_s,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "ANALYSIS_report.json").write_text(
+        json.dumps(report.to_json(), indent=2))
+    print(f"  B14 analysis: {out['findings']} findings "
+          f"({out['suppressed']} suppressed, {out['baselined']} baselined) "
+          f"in {out['files']} files, {out['elapsed_s']}s "
+          f"(budget {budget_s:.0f}s) -> "
+          f"{'PASS' if out['pass'] else 'FAIL'}")
+    return out
+
+
+# ===================================================================== #
 def run_smoke() -> int:
     """The repo smoke check: fast test tier + one scheduler bench bucket
     + a small cold-vs-warm update bucket.
@@ -311,8 +350,10 @@ def run_smoke() -> int:
     jbs = bench_jobs.run(fast=True)
     bench_jobs.write_results(
         {bench_jobs.section_key(True) + "_smoke": jbs})
+    print("[smoke] analysis bucket: invariant analyzer over src/")
+    ana = bench_analysis()
     ok = (tests.returncode == 0 and s16 >= FLOOR and upd["pass"]
-          and gwy["pass"] and cch["pass"] and jbs["pass"])
+          and gwy["pass"] and cch["pass"] and jbs["pass"] and ana["pass"])
     print(f"[smoke] {'PASS' if ok else 'FAIL'}: tests "
           f"exit={tests.returncode}, 16-thread speedup={s16:.2f}x "
           f"(floor {FLOOR}x), warm update "
@@ -325,7 +366,9 @@ def run_smoke() -> int:
           f"cache {bench_cache.floor_speedup(cch):.2f}x "
           f"(floor {cch['floor']}x), jobs "
           f"{'PASS' if jbs['pass'] else 'FAIL'} "
-          f"(429 median {jbs['overflow']['reject_p50_ms']:.3f}ms)")
+          f"(429 median {jbs['overflow']['reject_p50_ms']:.3f}ms), "
+          f"analysis {'PASS' if ana['pass'] else 'FAIL'} "
+          f"({ana['findings']} findings, {ana['elapsed_s']}s)")
     return 0 if ok else 1
 
 
@@ -337,7 +380,7 @@ def main():
     ap.add_argument("--only", default=None,
                     choices=["kge", "serving", "update", "walks", "sched",
                              "concurrent", "gateway", "http", "http-mp",
-                             "cache", "scale", "jobs"])
+                             "cache", "scale", "jobs", "analysis"])
     args = ap.parse_args()
 
     if args.fast and args.only is None:
@@ -425,6 +468,9 @@ def main():
             bench_jobs.write_results(
                 {bench_jobs.section_key(args.fast): jbs})
             report["jobs"] = jbs
+        if args.only in (None, "analysis"):
+            print("[B14] invariant analyzer over src/")
+            report["analysis"] = bench_analysis()
 
     report["total_wall_s"] = round(time.perf_counter() - t0, 1)
     out = RESULTS / ("bench_fast.json" if args.fast else "bench.json")

@@ -1,0 +1,17 @@
+"""Repo-native invariant analyzer: AST checks for the serving-stack
+architecture contracts (locking, atomic publish, fork safety, wire
+schema, exception handling) plus pyflakes-level hygiene.
+
+Run it with ``python -m repro.analysis [--strict] [paths...]``; see the
+README's "Static analysis & invariants" section for the rule catalogue,
+suppression syntax and baseline workflow.
+"""
+from .core import (AnalysisReport, Checker, Finding, SourceModule,
+                   all_checkers, load_baseline, register, render_human,
+                   run_analysis, write_baseline)
+
+__all__ = [
+    "AnalysisReport", "Checker", "Finding", "SourceModule", "all_checkers",
+    "load_baseline", "register", "render_human", "run_analysis",
+    "write_baseline",
+]

@@ -1,0 +1,100 @@
+"""CLI for the invariant analyzer.
+
+    python -m repro.analysis                 # scan src/, report, exit 0
+    python -m repro.analysis --strict        # exit 1 on any finding
+    python -m repro.analysis --select GEN    # generic-lint rules only
+    python -m repro.analysis --json out.json # machine-readable report
+    python -m repro.analysis --write-baseline  # grandfather what's left
+
+Exit codes: 0 = clean (or non-strict), 1 = unsuppressed findings under
+``--strict``, 2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from .core import all_checkers, render_human, run_analysis, write_baseline
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-native invariant analyzer (BIO + GEN rules)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to scan (default: src/)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 if any unsuppressed finding remains")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule codes/prefixes "
+                         "(e.g. BIO, GEN001)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the full JSON report to this path")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: ./{DEFAULT_BASELINE} "
+                         "when present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore any baseline file")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current unsuppressed findings to the "
+                         "baseline file and exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also list suppressed/baselined findings")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for code, checker in all_checkers().items():
+            scope = ("all modules" if checker.path_scope is None
+                     else ", ".join(checker.path_scope))
+            print(f"{code} {checker.name}\n    contract: "
+                  f"{checker.contract}\n    scope: {scope}")
+        return 0
+
+    root = Path.cwd()
+    paths = [Path(p) for p in (args.paths or [])]
+    if not paths:
+        default = root / "src"
+        paths = [default if default.is_dir() else root]
+    for p in paths:
+        if not p.exists():
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+
+    baseline = None
+    if not args.no_baseline:
+        baseline = Path(args.baseline) if args.baseline \
+            else root / DEFAULT_BASELINE
+
+    select = args.select.split(",") if args.select else None
+    try:
+        report = run_analysis(paths, root=root, select=select,
+                              baseline=baseline)
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        target = baseline or (root / DEFAULT_BASELINE)
+        write_baseline(target, report.findings)
+        print(f"baselined {len(report.findings)} finding(s) -> {target}")
+        return 0
+
+    if args.json_out:
+        out = Path(args.json_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(report.to_json(), indent=2) + "\n")
+
+    print(render_human(report, verbose=args.verbose))
+    if args.strict and not report.ok:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

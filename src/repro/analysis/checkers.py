@@ -1,0 +1,657 @@
+"""BIO rules — the serving-stack architecture contracts, as AST checks.
+
+Each rule encodes one invariant that earlier PRs established by
+convention and review:
+
+* BIO001 lock-discipline   — state guarded somewhere must be guarded
+  everywhere (PR 2 scheduler, PR 7 cache, PR 9 jobs).
+* BIO002 atomic-write      — snapshot/state files are published with
+  the tmp+``os.replace`` idiom from ``checkpoint/store.py`` (PR 6).
+* BIO003 fork-safety       — no jax usage in worker-pool parent code
+  before ``os.fork`` (PR 6: imports are fork-safe, device ops are not).
+* BIO004 wire-schema drift — route table, request/response dataclasses,
+  ``_TYPES`` codec map and error-code status maps stay in lock-step
+  (PR 4/5).
+* BIO005 exception-swallow — a broad ``except`` that silently drops
+  control flow (and with it a Ticket/Job resolution path) must carry a
+  written justification (PR 2/9 exactly-once contracts).
+
+Rules fire off *content* markers (a class owning a lock, a module
+calling ``os.fork``, a module defining ``CODE_STATUS``/``_routes``)
+wherever possible, so fixture snippets exercise them without
+repo-specific paths.  BIO002/BIO005 are path-scoped to the persistence
+and serving-stack modules; other modules opt in with
+``# bioan: module-scope[BIO002]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .core import Checker, Finding, SourceModule, register
+
+#: threading factories whose result makes ``self.X`` a lock attribute
+_LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore",
+                   "BoundedSemaphore"}
+
+
+def _call_name(func: ast.expr) -> str:
+    """Dotted display name of a call target: ``os.replace``, ``open`` …"""
+    parts: List[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    elif not parts:
+        return ""
+    return ".".join(reversed(parts))
+
+
+def _const_str(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+# ====================================================================== #
+# BIO001 — lock discipline
+# ====================================================================== #
+
+def _class_lock_names(cls: ast.ClassDef) -> Set[str]:
+    """Attributes assigned a ``threading.Lock()``-family object anywhere
+    in the class — owning one is what opts the class into BIO001."""
+    names: Set[str] = set()
+    for node in ast.walk(cls):
+        if not (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)):
+            continue
+        if _call_name(node.value.func).split(".")[-1] not in _LOCK_FACTORIES:
+            continue
+        for t in node.targets:
+            if (isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"):
+                names.add(t.attr)
+    return names
+
+
+def _store_sites(target: ast.expr) -> List[Tuple[str, str, ast.expr]]:
+    """(attr, base_display, node) for attribute/subscript-store targets:
+    ``self.x``, ``self.x[k]``, ``job.x``, ``job.x[k]`` …"""
+    out: List[Tuple[str, str, ast.expr]] = []
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for el in target.elts:
+            out.extend(_store_sites(el))
+        return out
+    node = target
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute):
+        base = node.value
+        if isinstance(base, ast.Name):
+            out.append((node.attr, base.id, target))
+        elif (isinstance(base, ast.Attribute)
+              and isinstance(base.value, ast.Name)):
+            out.append((node.attr, f"{base.value.id}.{base.attr}", target))
+    return out
+
+
+class _Site:
+    __slots__ = ("line", "col", "base", "func")
+
+    def __init__(self, line: int, col: int, base: str, func: str):
+        self.line, self.col, self.base, self.func = line, col, base, func
+
+
+@register
+class LockDisciplineChecker(Checker):
+    code = "BIO001"
+    name = "lock-discipline"
+    contract = ("in a class owning a threading lock, an attribute written "
+                "under 'with self._lock' anywhere must be written under it "
+                "everywhere (helpers called with the lock held are named "
+                "'*_locked')")
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        assert mod.tree is not None
+        for cls in [n for n in ast.walk(mod.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            locks = _class_lock_names(cls)
+            if not locks:
+                continue
+            guarded: Dict[str, List[_Site]] = {}
+            unguarded: Dict[str, List[_Site]] = {}
+
+            def record(stmt_targets, node, is_guarded, fn_name):
+                for target in stmt_targets:
+                    for attr, base, tnode in _store_sites(target):
+                        if attr in locks:
+                            continue
+                        bucket = guarded if is_guarded else unguarded
+                        bucket.setdefault(attr, []).append(_Site(
+                            tnode.lineno, tnode.col_offset, base, fn_name))
+
+            def walk(node, is_guarded, fn_name):
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    g = is_guarded or any(
+                        isinstance(it.context_expr, ast.Attribute)
+                        and isinstance(it.context_expr.value, ast.Name)
+                        and it.context_expr.value.id == "self"
+                        and it.context_expr.attr in locks
+                        for it in node.items)
+                    for child in node.body:
+                        walk(child, g, fn_name)
+                    return
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    # a closure defined while holding the lock does not run
+                    # while holding it — reset the guard state inside
+                    for child in node.body:
+                        walk(child, False, fn_name)
+                    return
+                if isinstance(node, ast.Assign):
+                    record(node.targets, node, is_guarded, fn_name)
+                elif isinstance(node, ast.AugAssign):
+                    record([node.target], node, is_guarded, fn_name)
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    record([node.target], node, is_guarded, fn_name)
+                for child in ast.iter_child_nodes(node):
+                    walk(child, is_guarded, fn_name)
+
+            for fn in cls.body:
+                if not isinstance(fn, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    continue
+                if fn.name == "__init__":
+                    # construction is single-threaded by contract: writes
+                    # there neither need the lock nor count as precedent
+                    continue
+                # repo convention (ResultCache._evict_locked): a '*_locked'
+                # suffix documents "caller holds the lock"
+                held = fn.name.endswith("_locked")
+                for child in fn.body:
+                    walk(child, held, fn.name)
+
+            lockdisp = " / ".join(f"self.{l}" for l in sorted(locks))
+            for attr, sites in sorted(unguarded.items()):
+                if attr not in guarded:
+                    continue
+                for s in sites:
+                    findings.append(Finding(
+                        self.code, mod.rel, s.line, s.col,
+                        f"'{s.base}.{attr}' is written without holding "
+                        f"{lockdisp}, but other writes in class "
+                        f"'{cls.name}' are lock-guarded — hold the lock, "
+                        "or rename the helper '*_locked' if every caller "
+                        "already holds it",
+                        context=f"{cls.name}.{s.func}"))
+        return findings
+
+
+# ====================================================================== #
+# BIO002 — atomic writes in persistence modules
+# ====================================================================== #
+
+#: direct write calls that publish bytes to a path
+_WRITE_ATTR_CALLS = {"write_text", "write_bytes"}
+_WRITE_DOTTED = {"np.save", "np.savez", "np.savez_compressed",
+                 "numpy.save", "numpy.savez", "numpy.savez_compressed",
+                 "json.dump", "pickle.dump"}
+
+
+def _open_mode_writes(call: ast.Call) -> bool:
+    """True for ``open(path, "w")`` / ``path.open("wb")`` etc."""
+    mode: Optional[str] = None
+    name = _call_name(call.func)
+    if name == "open" and len(call.args) >= 2:
+        mode = _const_str(call.args[1])
+    elif name.endswith(".open") and call.args:
+        mode = _const_str(call.args[0])
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode = _const_str(kw.value)
+    if name != "open" and not name.endswith(".open"):
+        return False
+    if mode is None:
+        return False
+    return any(c in mode for c in "wax")
+
+
+@register
+class AtomicWriteChecker(Checker):
+    code = "BIO002"
+    name = "atomic-write"
+    contract = ("files under the snapshot store / job state dirs are "
+                "published tmp-first and made visible with os.replace "
+                "(the checkpoint/store.py idiom); direct writes tear "
+                "under concurrent readers and surviving processes")
+    path_scope = (
+        "repro/checkpoint/store.py",
+        "repro/api/jobs.py",
+        "repro/api/workers.py",
+        "repro/core/registry.py",
+        "repro/core/updater.py",
+    )
+
+    @staticmethod
+    def _own_nodes(root: ast.AST) -> Iterable[ast.AST]:
+        """Descendants of ``root`` excluding nested function bodies —
+        each nested def gets its own atomic-idiom exemption decision."""
+        stack = list(ast.iter_child_nodes(root))
+        while stack:
+            n = stack.pop()
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            yield n
+            stack.extend(ast.iter_child_nodes(n))
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        assert mod.tree is not None
+        # module level: no enclosing function can implement the idiom
+        for stmt in mod.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Call):
+                    self._check_call(sub, mod, "<module>", findings)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_function(node, findings, mod)
+        return findings
+
+    def _scan_function(self, fn, findings, mod) -> None:
+        # the idiom itself is exempt: helpers named *atomic* and any
+        # function that finishes its writes with an os.replace publish
+        if "atomic" in fn.name:
+            return
+        own = list(self._own_nodes(fn))
+        if any(isinstance(n, ast.Call)
+               and _call_name(n.func) in ("os.replace", "os.rename")
+               for n in own):
+            return
+        for n in own:
+            if isinstance(n, ast.Call):
+                self._check_call(n, mod, fn.name, findings)
+
+    def _check_call(self, call: ast.Call, mod: SourceModule,
+                    owner: str, findings: List[Finding]) -> None:
+        name = _call_name(call.func)
+        is_write = (
+            name.split(".")[-1] in _WRITE_ATTR_CALLS
+            or name in _WRITE_DOTTED
+            or _open_mode_writes(call))
+        if not is_write:
+            return
+        findings.append(Finding(
+            self.code, mod.rel, call.lineno, call.col_offset,
+            f"direct write '{name}' in function '{owner}' bypasses the "
+            "tmp+os.replace atomic-publish idiom — write to a sibling "
+            "tmp path and os.replace it (see checkpoint/store.py "
+            "_atomic_write_bytes)",
+            context=owner))
+
+
+# ====================================================================== #
+# BIO003 — fork safety in pre-fork parent code
+# ====================================================================== #
+
+@register
+class ForkSafetyChecker(Checker):
+    code = "BIO003"
+    name = "fork-safety"
+    contract = ("a module that calls os.fork keeps jax out of the parent "
+                "image: no top-level jax imports and no jax usage in the "
+                "fork-calling function or its class (importing inside "
+                "worker/post-fork functions is fine — imports are "
+                "fork-safe, the first device op is not)")
+
+    _JAX_ROOTS = ("jax",)
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        assert mod.tree is not None
+        tree = mod.tree
+        fork_fns = [
+            fn for fn in ast.walk(tree)
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef))
+            and any(isinstance(n, ast.Call)
+                    and _call_name(n.func) in ("os.fork", "fork")
+                    for n in ast.walk(fn))]
+        module_forks = any(
+            isinstance(n, ast.Call)
+            and _call_name(n.func) in ("os.fork", "fork")
+            for stmt in tree.body
+            if not isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef))
+            for n in ast.walk(stmt))
+        if not fork_fns and not module_forks:
+            return ()
+
+        findings: List[Finding] = []
+        jax_names: Set[str] = set()
+        # names bound to jax anywhere in the module (incl. deferred
+        # imports — using them pre-fork is the hazard, not binding them)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[0] in self._JAX_ROOTS:
+                        jax_names.add(
+                            (alias.asname or alias.name).split(".")[0])
+            elif isinstance(node, ast.ImportFrom):
+                if node.module and not node.level \
+                        and node.module.split(".")[0] in self._JAX_ROOTS:
+                    for alias in node.names:
+                        jax_names.add(alias.asname or alias.name)
+
+        # 1. top-level jax imports put jax in every parent's image
+        for stmt in tree.body:
+            bad = None
+            if isinstance(stmt, ast.Import):
+                bad = next((a.name for a in stmt.names
+                            if a.name.split(".")[0] in self._JAX_ROOTS), None)
+            elif isinstance(stmt, ast.ImportFrom) and stmt.module \
+                    and not stmt.level \
+                    and stmt.module.split(".")[0] in self._JAX_ROOTS:
+                bad = stmt.module
+            if bad is not None:
+                findings.append(Finding(
+                    self.code, mod.rel, stmt.lineno, stmt.col_offset,
+                    f"top-level import of '{bad}' in a module that calls "
+                    "os.fork — defer it into post-fork/worker functions "
+                    "(the PR 6 pre-warm pattern imports modules, never "
+                    "runs device ops, before forking)",
+                    context="<module>"))
+
+        if not jax_names:
+            return findings
+
+        # 2. jax usage in pre-fork zones: the fork-calling function, its
+        # enclosing class (supervisor-side code), and the module body
+        zones: List[Tuple[str, Iterable[ast.stmt]]] = []
+        fork_classes = []
+        for cls in [n for n in ast.walk(tree)
+                    if isinstance(n, ast.ClassDef)]:
+            if any(fn in ast.walk(cls) for fn in fork_fns):
+                fork_classes.append(cls)
+        for cls in fork_classes:
+            zones.append((cls.name, cls.body))
+        for fn in fork_fns:
+            if not any(fn in ast.walk(cls) for cls in fork_classes):
+                zones.append((fn.name, fn.body))
+        zones.append(("<module>", [
+            s for s in tree.body
+            if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef, ast.Import,
+                                  ast.ImportFrom))]))
+
+        for zone_name, body in zones:
+            for stmt in body:
+                for n in ast.walk(stmt):
+                    root = None
+                    if isinstance(n, ast.Name) and n.id in jax_names \
+                            and isinstance(n.ctx, ast.Load):
+                        root = n.id
+                    if root is not None:
+                        findings.append(Finding(
+                            self.code, mod.rel, n.lineno, n.col_offset,
+                            f"'{root}' used in pre-fork parent code "
+                            f"('{zone_name}') of a forking module — a "
+                            "device op here initializes the jax backend "
+                            "in the parent and corrupts every forked "
+                            "worker; move it past os.fork",
+                            context=zone_name))
+        return findings
+
+
+# ====================================================================== #
+# BIO004 — wire-schema drift
+# ====================================================================== #
+
+def _dict_str_keys(node: ast.expr) -> List[Tuple[str, int, int]]:
+    out = []
+    if isinstance(node, ast.Dict):
+        for k in node.keys:
+            s = _const_str(k) if k is not None else None
+            if s is not None:
+                out.append((s, k.lineno, k.col_offset))
+    return out
+
+
+@register
+class WireSchemaChecker(Checker):
+    code = "BIO004"
+    name = "wire-schema-drift"
+    contract = ("the gateway route table, the schema dataclasses, the "
+                "_TYPES wire-codec map, and the CODE_STATUS/_LEGACY error "
+                "maps move in lock-step: every route has a registered "
+                "request class + live handler, every Request/Response/Page "
+                "dataclass round-trips through to_wire/from_wire, every "
+                "error code raised anywhere has an HTTP status")
+    project_level = True
+
+    _WIRE_SUFFIXES = ("Request", "Response", "Page")
+
+    def check_project(
+            self, mods: Sequence[SourceModule]) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        code_status: Dict[str, Tuple[SourceModule, int]] = {}
+        legacy: Dict[str, Tuple[SourceModule, int]] = {}
+        code_status_site: Optional[Tuple[SourceModule, int]] = None
+        legacy_site: Optional[Tuple[SourceModule, int]] = None
+        types_keys: Set[str] = set()
+        types_site: Optional[Tuple[SourceModule, int]] = None
+        dataclasses_by_mod: Dict[str, List[Tuple[str, SourceModule, int]]] = {}
+        all_dataclasses: Set[str] = set()
+
+        for mod in mods:
+            assert mod.tree is not None
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    tname = node.targets[0].id
+                elif isinstance(node, ast.AnnAssign) \
+                        and isinstance(node.target, ast.Name) \
+                        and node.value is not None:
+                    tname = node.target.id
+                else:
+                    tname = None
+                if tname == "CODE_STATUS":
+                    val = node.value
+                    code_status_site = (mod, node.lineno)
+                    for key, ln, _ in _dict_str_keys(val):
+                        code_status[key] = (mod, ln)
+                elif tname == "_LEGACY":
+                    legacy_site = (mod, node.lineno)
+                    for key, ln, _ in _dict_str_keys(node.value):
+                        legacy[key] = (mod, ln)
+                elif tname == "_TYPES" and isinstance(node.value, ast.Dict):
+                    types_site = (mod, node.lineno)
+                    for k in node.value.keys:
+                        if isinstance(k, ast.Name):
+                            types_keys.add(k.id)
+                if isinstance(node, ast.ClassDef):
+                    if any("dataclass" in _call_name(
+                            d.func if isinstance(d, ast.Call) else d)
+                           for d in node.decorator_list):
+                        dataclasses_by_mod.setdefault(mod.rel, []).append(
+                            (node.name, mod, node.lineno))
+                        all_dataclasses.add(node.name)
+
+        # ---- error-code maps stay symmetric ---------------------------- #
+        if code_status and legacy:
+            for key, (mod, ln) in sorted(code_status.items()):
+                if key not in legacy:
+                    findings.append(Finding(
+                        self.code, mod.rel, ln, 0,
+                        f"error code '{key}' has an HTTP status in "
+                        "CODE_STATUS but no legacy-exception mapping in "
+                        "_LEGACY", context="CODE_STATUS"))
+            for key, (mod, ln) in sorted(legacy.items()):
+                if key not in code_status:
+                    findings.append(Finding(
+                        self.code, mod.rel, ln, 0,
+                        f"error code '{key}' is mapped in _LEGACY but has "
+                        "no HTTP status in CODE_STATUS — the HTTP layer "
+                        "would crash serializing it", context="_LEGACY"))
+
+        # ---- every wire dataclass is registered in the codec ----------- #
+        if types_site is not None:
+            types_mod = types_site[0]
+            for name, mod, ln in dataclasses_by_mod.get(types_mod.rel, []):
+                if name.endswith(self._WIRE_SUFFIXES) \
+                        and name not in types_keys:
+                    findings.append(Finding(
+                        self.code, mod.rel, ln, 0,
+                        f"wire dataclass '{name}' is not registered in "
+                        "_TYPES — to_wire/from_wire cannot round-trip it",
+                        context=name))
+
+        # ---- the route table ------------------------------------------- #
+        for mod in mods:
+            assert mod.tree is not None
+            for cls in [n for n in ast.walk(mod.tree)
+                        if isinstance(n, ast.ClassDef)]:
+                methods = {fn.name for fn in cls.body
+                           if isinstance(fn, (ast.FunctionDef,
+                                              ast.AsyncFunctionDef))}
+                routes = self._route_entries(cls)
+                for (rname, req_cls, handler, ln, col) in routes:
+                    if req_cls is not None and all_dataclasses \
+                            and req_cls not in all_dataclasses:
+                        findings.append(Finding(
+                            self.code, mod.rel, ln, col,
+                            f"route '{rname}' references request class "
+                            f"'{req_cls}' which is not a schema dataclass "
+                            "in the scanned modules",
+                            context=f"{cls.name}._routes"))
+                    if req_cls is not None and types_site is not None \
+                            and req_cls in all_dataclasses \
+                            and req_cls not in types_keys:
+                        findings.append(Finding(
+                            self.code, mod.rel, ln, col,
+                            f"route '{rname}' request class '{req_cls}' "
+                            "is missing from the _TYPES codec map",
+                            context=f"{cls.name}._routes"))
+                    if handler is not None and handler not in methods:
+                        findings.append(Finding(
+                            self.code, mod.rel, ln, col,
+                            f"route '{rname}' names handler "
+                            f"'self.{handler}' but class '{cls.name}' "
+                            "defines no such method",
+                            context=f"{cls.name}._routes"))
+
+        # ---- every raised error code has a status ---------------------- #
+        if code_status:
+            for mod in mods:
+                assert mod.tree is not None
+                for node in ast.walk(mod.tree):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    callee = _call_name(node.func)
+                    code: Optional[str] = None
+                    if callee.split(".")[-1] == "ApiError" and node.args:
+                        code = _const_str(node.args[0])
+                    elif callee.split(".")[-1] == "SchedulerError":
+                        if len(node.args) >= 2:
+                            code = _const_str(node.args[1])
+                        for kw in node.keywords:
+                            if kw.arg == "code":
+                                code = _const_str(kw.value)
+                    if code is not None and code not in code_status:
+                        findings.append(Finding(
+                            self.code, mod.rel, node.lineno,
+                            node.col_offset,
+                            f"error code '{code}' raised here has no "
+                            "HTTP status in CODE_STATUS — add it to the "
+                            "schema maps before using it",
+                            context=callee))
+        return findings
+
+    @staticmethod
+    def _route_entries(cls: ast.ClassDef):
+        """Yield (name, request_class, handler_attr, line, col) from a
+        ``self._routes = ( (...), ... )`` assignment."""
+        out = []
+        for node in ast.walk(cls):
+            if not (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Attribute)
+                    and node.targets[0].attr == "_routes"
+                    and isinstance(node.targets[0].value, ast.Name)
+                    and node.targets[0].value.id == "self"):
+                continue
+            if not isinstance(node.value, (ast.Tuple, ast.List)):
+                continue
+            for entry in node.value.elts:
+                if not isinstance(entry, (ast.Tuple, ast.List)) \
+                        or not entry.elts:
+                    continue
+                rname = _const_str(entry.elts[0]) or "<dynamic>"
+                req_cls = None
+                handler = None
+                for el in entry.elts[1:]:
+                    if isinstance(el, ast.Name) and req_cls is None:
+                        req_cls = el.id
+                    elif isinstance(el, ast.Attribute) \
+                            and isinstance(el.value, ast.Name) \
+                            and el.value.id == "self":
+                        handler = el.attr
+                out.append((rname, req_cls, handler,
+                            entry.lineno, entry.col_offset))
+        return out
+
+
+# ====================================================================== #
+# BIO005 — silent broad-exception swallows
+# ====================================================================== #
+
+@register
+class ExceptionSwallowChecker(Checker):
+    code = "BIO005"
+    name = "exception-swallow"
+    contract = ("a broad 'except' whose body only passes can drop a "
+                "Ticket/Job resolution path on the floor; it must "
+                "resolve, re-raise, narrow the type, or carry a comment "
+                "stating why swallowing is safe")
+
+    _BROAD = {"Exception", "BaseException"}
+
+    def _is_broad(self, handler: ast.ExceptHandler) -> bool:
+        t = handler.type
+        if t is None:
+            return True
+        names: List[ast.expr] = list(t.elts) if isinstance(t, ast.Tuple) \
+            else [t]
+        for n in names:
+            if isinstance(n, ast.Name) and n.id in self._BROAD:
+                return True
+            if isinstance(n, ast.Attribute) and n.attr in self._BROAD:
+                return True
+        return False
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        assert mod.tree is not None
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not self._is_broad(node):
+                continue
+            if not all(isinstance(s, (ast.Pass, ast.Continue))
+                       for s in node.body):
+                continue
+            end = max((s.end_lineno or s.lineno) for s in node.body)
+            if mod.has_comment_near(node.lineno, end):
+                continue
+            what = "except" if node.type is None else \
+                f"except {_call_name(node.type) or 'Exception'}"
+            findings.append(Finding(
+                self.code, mod.rel, node.lineno, node.col_offset,
+                f"broad '{what}' silently swallows with no justification "
+                "— resolve/re-raise/narrow it, or add a comment on the "
+                "handler explaining why dropping this error is safe",
+                context=""))
+        return findings

@@ -1,0 +1,405 @@
+"""Core machinery for the repo-native invariant analyzer.
+
+Nine PRs of serving-stack growth accreted architecture contracts that
+nothing checked mechanically: lock-guarded scheduler/job state, the
+tmp+``os.replace`` atomic-publish idiom, no-jax-before-fork in the
+worker pool, and the typed wire schema with stable error codes.  This
+package turns them into AST-checked invariants (stdlib ``ast`` only —
+no new dependencies).
+
+This module owns everything rule-independent:
+
+* :class:`Finding` — one diagnostic, with a line-independent
+  fingerprint so baselines survive unrelated edits;
+* :class:`SourceModule` — a parsed file plus its suppression
+  directives (``# bioan: ignore[RULE]`` per line,
+  ``# bioan: ignore-file[RULE]`` per file, ``# bioan: module-scope[RULE]``
+  to opt a module into a path-scoped rule);
+* the checker registry (:func:`register`, :func:`all_checkers`);
+* :func:`run_analysis` — scan paths, run checkers, apply suppressions
+  and the committed baseline, return an :class:`AnalysisReport`;
+* baseline load/write and JSON / human report rendering.
+
+Checkers live in :mod:`repro.analysis.checkers` (BIO rules — the
+serving-stack contracts) and :mod:`repro.analysis.generic` (GEN rules —
+pyflakes-level hygiene).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import hashlib
+import io
+import json
+import re
+import time
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "ALL_RULES", "AnalysisReport", "Checker", "Finding", "SourceModule",
+    "all_checkers", "baseline_fingerprints", "load_baseline", "register",
+    "render_human", "run_analysis", "write_baseline",
+]
+
+#: directive grammar: ``# bioan: ignore`` / ``# bioan: ignore[BIO001,GEN002]``
+#: / ``# bioan: ignore-file[...]`` / ``# bioan: module-scope[BIO002]``
+_DIRECTIVE_RE = re.compile(
+    r"#\s*bioan:\s*(?P<verb>ignore-file|ignore|module-scope)"
+    r"\s*(?:\[(?P<rules>[A-Za-z0-9_,\s]+)\])?")
+
+#: sentinel rule set meaning "every rule"
+ALL_RULES = frozenset({"*"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic emitted by a checker."""
+
+    rule: str          #: e.g. "BIO001"
+    path: str          #: path relative to the scan root, POSIX separators
+    line: int          #: 1-based line of the offending node
+    col: int           #: 0-based column
+    message: str       #: human sentence stating the violated contract
+    context: str = ""  #: enclosing "Class.method" qualname, if any
+
+    @property
+    def fingerprint(self) -> str:
+        """Line-independent identity used by the baseline file: unrelated
+        edits that shift line numbers must not un-grandfather a finding."""
+        raw = "|".join((self.rule, self.path, self.context, self.message))
+        return hashlib.sha1(raw.encode("utf-8")).hexdigest()[:16]
+
+    def to_json(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+
+class SourceModule:
+    """One parsed Python file plus its comment directives."""
+
+    def __init__(self, path: Path, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree: Optional[ast.Module] = None
+        self.parse_error: Optional[SyntaxError] = None
+        #: line -> comment text (from tokenize, so '#' inside strings
+        #: never counts as a comment)
+        self.comments: Dict[int, str] = {}
+        #: line -> rule set suppressed on that line ({"*"} = all)
+        self.line_ignores: Dict[int, Set[str]] = {}
+        #: rules suppressed for the whole file
+        self.file_ignores: Set[str] = set()
+        #: rules this module opts into despite being outside their path
+        #: scope (used by path-scoped checkers like BIO002/BIO005)
+        self.scope_optins: Set[str] = set()
+        try:
+            self.tree = ast.parse(text, filename=str(path))
+        except SyntaxError as e:
+            self.parse_error = e
+        self._scan_comments()
+
+    def _scan_comments(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(self.text).readline)
+            for tok in tokens:
+                if tok.type == tokenize.COMMENT:
+                    self.comments[tok.start[0]] = tok.string
+        except (tokenize.TokenError, IndentationError, SyntaxError):
+            return
+        for lineno, comment in self.comments.items():
+            m = _DIRECTIVE_RE.search(comment)
+            if not m:
+                continue
+            rules = m.group("rules")
+            ruleset = (set(ALL_RULES) if rules is None
+                       else {r.strip().upper() for r in rules.split(",")
+                             if r.strip()})
+            verb = m.group("verb")
+            if verb == "ignore":
+                self.line_ignores.setdefault(lineno, set()).update(ruleset)
+            elif verb == "ignore-file":
+                self.file_ignores.update(ruleset)
+            else:  # module-scope
+                self.scope_optins.update(ruleset)
+
+    # ------------------------------------------------------------------ #
+    def has_comment_near(self, start: int, end: int) -> bool:
+        """True if any comment lands on lines [start, end] — BIO005's
+        "a silent swallow needs a written justification" test."""
+        return any(start <= ln <= end for ln in self.comments)
+
+    def is_suppressed(self, finding: Finding) -> bool:
+        for rules in (self.file_ignores,
+                      self.line_ignores.get(finding.line, ())):
+            if rules and ("*" in rules or finding.rule in {r for r in rules}):
+                return True
+        return False
+
+    def in_scope(self, checker: "Checker") -> bool:
+        """Path-scoped checkers run on modules whose relpath matches one
+        of the checker's suffixes, or that opt in via module-scope."""
+        if checker.path_scope is None:
+            return True
+        if checker.code in self.scope_optins:
+            return True
+        rel = self.rel
+        return any(rel.endswith(sfx) for sfx in checker.path_scope)
+
+
+class Checker:
+    """Base class: subclass, set ``code``/``name``/``contract``, implement
+    :meth:`check_module` (per-file rules) or :meth:`check_project`
+    (cross-file rules — receives every scanned module at once)."""
+
+    code: str = ""
+    name: str = ""
+    #: one-line statement of the architecture contract the rule encodes
+    contract: str = ""
+    #: relpath suffixes the rule applies to; None = every module.
+    #: Modules outside the scope can opt in with
+    #: ``# bioan: module-scope[CODE]``.
+    path_scope: Optional[Tuple[str, ...]] = None
+    #: project-level rules run once over all modules, not per file
+    project_level: bool = False
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        return ()
+
+    def check_project(
+            self, mods: Sequence[SourceModule]) -> Iterable[Finding]:
+        return ()
+
+
+_REGISTRY: Dict[str, Checker] = {}
+
+
+def register(cls: type) -> type:
+    """Class decorator: instantiate and add a checker to the registry."""
+    inst = cls()
+    if not inst.code:
+        raise ValueError(f"checker {cls.__name__} has no code")
+    if inst.code in _REGISTRY:
+        raise ValueError(f"duplicate checker code {inst.code}")
+    _REGISTRY[inst.code] = inst
+    return cls
+
+
+def all_checkers() -> Dict[str, Checker]:
+    # importing the rule modules populates the registry on first use
+    from . import checkers as _c       # noqa: F401
+    from . import generic as _g        # noqa: F401
+    return dict(sorted(_REGISTRY.items()))
+
+
+# ---------------------------------------------------------------------- #
+# scanning
+
+def iter_python_files(paths: Sequence[Path], root: Path) -> List[Tuple[Path, str]]:
+    """Expand files/directories into (path, relpath) pairs, sorted,
+    skipping caches and hidden directories."""
+    out: List[Tuple[Path, str]] = []
+    seen: Set[Path] = set()
+
+    def rel_of(p: Path) -> str:
+        try:
+            return p.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            return p.as_posix()
+
+    for base in paths:
+        if base.is_file():
+            if base.suffix == ".py" and base not in seen:
+                seen.add(base)
+                out.append((base, rel_of(base)))
+            continue
+        for p in sorted(base.rglob("*.py")):
+            parts = p.relative_to(base).parts
+            if any(part.startswith(".") or part == "__pycache__"
+                   for part in parts[:-1]):
+                continue
+            if p not in seen:
+                seen.add(p)
+                out.append((p, rel_of(p)))
+    return out
+
+
+@dataclasses.dataclass
+class AnalysisReport:
+    """Everything one run produced, pre-split by suppression status."""
+
+    root: str
+    findings: List[Finding]              #: actionable (unsuppressed)
+    suppressed: List[Finding]            #: silenced by inline directives
+    baselined: List[Finding]             #: grandfathered by the baseline
+    files: int
+    rules: List[str]
+    elapsed_s: float
+    stale_baseline: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> Dict[str, object]:
+        counts: Dict[str, int] = {}
+        for f in self.findings:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        return {
+            "version": 1,
+            "root": self.root,
+            "files": self.files,
+            "rules": self.rules,
+            "elapsed_s": round(self.elapsed_s, 3),
+            "ok": self.ok,
+            "counts": counts,
+            "suppressed": len(self.suppressed),
+            "baselined": len(self.baselined),
+            "stale_baseline": list(self.stale_baseline),
+            "findings": [f.to_json() for f in self.findings],
+        }
+
+
+# ---------------------------------------------------------------------- #
+# baseline
+
+def load_baseline(path: Path) -> List[Dict[str, object]]:
+    data = json.loads(path.read_text())
+    if not isinstance(data, dict) or data.get("version") != 1:
+        raise ValueError(f"unrecognized baseline format in {path}")
+    return list(data.get("findings", []))
+
+
+def baseline_fingerprints(entries: Iterable[Dict[str, object]]) -> Set[str]:
+    return {str(e["fingerprint"]) for e in entries if "fingerprint" in e}
+
+
+def write_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    entries = [{
+        "fingerprint": f.fingerprint,
+        "rule": f.rule,
+        "path": f.path,
+        "context": f.context,
+        "message": f.message,
+    } for f in sorted(findings, key=lambda f: (f.path, f.rule, f.line))]
+    payload = json.dumps({"version": 1, "findings": entries}, indent=2)
+    path.write_text(payload + "\n")
+
+
+# ---------------------------------------------------------------------- #
+# the runner
+
+def _selected(checkers: Dict[str, Checker],
+              select: Optional[Sequence[str]]) -> List[Checker]:
+    if not select:
+        return list(checkers.values())
+    wanted = [s.strip().upper() for s in select if s.strip()]
+    picked = [c for code, c in checkers.items()
+              if any(code == w or code.startswith(w) for w in wanted)]
+    if not picked:
+        raise ValueError(f"--select matched no rules: {', '.join(wanted)}")
+    return picked
+
+
+def run_analysis(
+    paths: Sequence[Path],
+    root: Optional[Path] = None,
+    select: Optional[Sequence[str]] = None,
+    baseline: Optional[Path] = None,
+) -> AnalysisReport:
+    """Scan ``paths``, run the selected checkers, and split raw findings
+    into actionable / suppressed / baselined."""
+    t0 = time.perf_counter()
+    root = root or Path.cwd()
+    checkers = _selected(all_checkers(), select)
+
+    mods: List[SourceModule] = []
+    raw: List[Finding] = []
+    for path, rel in iter_python_files([Path(p) for p in paths], root):
+        try:
+            text = path.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError) as e:
+            raw.append(Finding("E001", rel, 1, 0, f"unreadable file: {e}"))
+            continue
+        mod = SourceModule(path, rel, text)
+        if mod.parse_error is not None:
+            e = mod.parse_error
+            raw.append(Finding("E001", rel, e.lineno or 1, (e.offset or 1) - 1,
+                               f"syntax error: {e.msg}"))
+            continue
+        mods.append(mod)
+
+    by_rel = {m.rel: m for m in mods}
+    for checker in checkers:
+        if checker.project_level:
+            scoped = [m for m in mods if m.in_scope(checker)]
+            raw.extend(checker.check_project(scoped))
+        else:
+            for mod in mods:
+                if mod.in_scope(checker):
+                    raw.extend(checker.check_module(mod))
+
+    baseline_fps: Set[str] = set()
+    baseline_entries: List[Dict[str, object]] = []
+    if baseline is not None and baseline.exists():
+        baseline_entries = load_baseline(baseline)
+        baseline_fps = baseline_fingerprints(baseline_entries)
+
+    actionable: List[Finding] = []
+    suppressed: List[Finding] = []
+    baselined: List[Finding] = []
+    for f in sorted(raw, key=lambda f: (f.path, f.line, f.col, f.rule)):
+        mod = by_rel.get(f.path)
+        if mod is not None and mod.is_suppressed(f):
+            suppressed.append(f)
+        elif f.fingerprint in baseline_fps:
+            baselined.append(f)
+        else:
+            actionable.append(f)
+
+    # a baseline entry no longer matched by any finding is stale — the
+    # violation was fixed, so the grandfather entry should be dropped
+    live = {f.fingerprint for f in baselined}
+    stale = [str(e["fingerprint"]) for e in baseline_entries
+             if str(e.get("fingerprint")) not in live]
+
+    return AnalysisReport(
+        root=str(root),
+        findings=actionable,
+        suppressed=suppressed,
+        baselined=baselined,
+        files=len(mods),
+        rules=[c.code for c in checkers],
+        elapsed_s=time.perf_counter() - t0,
+        stale_baseline=stale,
+    )
+
+
+def render_human(report: AnalysisReport, verbose: bool = False) -> str:
+    """The terminal report: one line per finding plus a summary tail."""
+    out: List[str] = []
+    for f in report.findings:
+        ctx = f" [{f.context}]" if f.context else ""
+        out.append(f"{f.path}:{f.line}:{f.col + 1}: {f.rule} {f.message}{ctx}")
+    if verbose:
+        for f in report.suppressed:
+            out.append(f"{f.path}:{f.line}: {f.rule} suppressed inline")
+        for f in report.baselined:
+            out.append(f"{f.path}:{f.line}: {f.rule} baselined "
+                       f"({f.fingerprint})")
+    if report.stale_baseline:
+        out.append(f"note: {len(report.stale_baseline)} stale baseline "
+                   "entr{} (fixed findings) — regenerate with "
+                   "--write-baseline".format(
+                       "y" if len(report.stale_baseline) == 1 else "ies"))
+    n = len(report.findings)
+    out.append(
+        f"{n} finding{'s' if n != 1 else ''} "
+        f"({len(report.suppressed)} suppressed, "
+        f"{len(report.baselined)} baselined) in {report.files} files, "
+        f"{report.elapsed_s:.2f}s")
+    return "\n".join(out)

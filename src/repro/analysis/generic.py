@@ -1,0 +1,117 @@
+"""GEN rules — pyflakes-level hygiene checks (no new dependencies).
+
+* GEN001 unused-import       — a module-level import whose bound name is
+  never referenced again (AST usage, ``__all__``, or string annotations).
+* GEN002 fstring-no-placeholder — an f-string with no ``{...}`` fields
+  is a plain string wearing a costume (usually a forgotten placeholder).
+
+GEN001 is deliberately conservative: a name that appears as a word in
+any string constant (docstring examples, string annotations) counts as
+used, so it only fires when the import is provably dead.  ``__init__``
+re-export modules are skipped entirely.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, List, Set
+
+from .core import Checker, Finding, SourceModule, register
+
+
+@register
+class UnusedImportChecker(Checker):
+    code = "GEN001"
+    name = "unused-import"
+    contract = ("module-level imports are either used or deleted; dead "
+                "imports hide real dependencies and slow cold start")
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        if mod.rel.endswith("__init__.py"):
+            return ()
+        assert mod.tree is not None
+        tree = mod.tree
+
+        used: Set[str] = set()
+        exported: Set[str] = set()
+        string_words: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Name):
+                used.add(node.id)
+            elif isinstance(node, ast.Attribute):
+                pass  # the root Name is already collected above
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, str):
+                string_words.update(re.findall(r"[A-Za-z_][A-Za-z0-9_]*",
+                                               node.value))
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id == "__all__":
+                        for el in getattr(node.value, "elts", []):
+                            if isinstance(el, ast.Constant) \
+                                    and isinstance(el.value, str):
+                                exported.add(el.value)
+
+        findings: List[Finding] = []
+        for stmt in tree.body:
+            if isinstance(stmt, ast.Import):
+                for alias in stmt.names:
+                    bound = alias.asname or alias.name.split(".")[0]
+                    self._judge(bound, alias.name, stmt, mod, used,
+                                exported, string_words, findings)
+            elif isinstance(stmt, ast.ImportFrom):
+                if stmt.module == "__future__":
+                    continue
+                for alias in stmt.names:
+                    if alias.name == "*":
+                        continue
+                    bound = alias.asname or alias.name
+                    self._judge(bound, alias.name, stmt, mod, used,
+                                exported, string_words, findings)
+        return findings
+
+    def _judge(self, bound: str, imported: str, stmt: ast.stmt,
+               mod: SourceModule, used: Set[str], exported: Set[str],
+               string_words: Set[str], findings: List[Finding]) -> None:
+        if bound.startswith("_"):
+            return  # `import x as _x` marks a deliberate side-effect import
+        if bound in exported or bound in string_words:
+            return
+        # the Name collector also saw the import statement's own binding?
+        # no — import bindings are alias objects, not Name nodes, so any
+        # Name occurrence is a real use
+        if bound in used:
+            return
+        findings.append(Finding(
+            self.code, mod.rel, stmt.lineno, stmt.col_offset,
+            f"'{imported}' imported as '{bound}' is never used",
+            context="<module>"))
+
+
+@register
+class FStringPlaceholderChecker(Checker):
+    code = "GEN002"
+    name = "fstring-no-placeholder"
+    contract = ("an f-string must interpolate something; a placeholder-"
+                "free f prefix usually means a brace was forgotten")
+
+    def check_module(self, mod: SourceModule) -> Iterable[Finding]:
+        assert mod.tree is not None
+        # format_spec sub-f-strings (f"{x:>{w}}") are implementation
+        # detail, not user-written f-strings — skip them
+        spec_ids = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.FormattedValue) \
+                    and node.format_spec is not None:
+                spec_ids.add(id(node.format_spec))
+        findings: List[Finding] = []
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.JoinedStr) and id(node) not in spec_ids:
+                if not any(isinstance(v, ast.FormattedValue)
+                           for v in node.values):
+                    findings.append(Finding(
+                        self.code, mod.rel, node.lineno, node.col_offset,
+                        "f-string without any placeholder — drop the 'f' "
+                        "prefix or add the missing interpolation",
+                        context=""))
+        return findings

@@ -750,12 +750,19 @@ class GatewayHTTPServer(ThreadingHTTPServer):
     def _observe_304(self, seconds: float) -> None:
         self.not_modified_latency.observe(seconds)
 
+    def http_counts(self) -> Dict[str, int]:
+        """Point-in-time copy of the transport counters.  The lock makes
+        the snapshot consistent across counters — callers (the worker
+        state dump, the pool-merged /stats) must use this instead of
+        copying ``http_stats`` while request threads mutate it."""
+        with self._stats_lock:
+            return dict(self.http_stats)
+
     def http_snapshot(self) -> Dict[str, Any]:
         """Transport counters + 304 latency for /stats bodies (and the
         worker-pool state dumps — histograms merge across workers via
         ``LatencyHistogram.merge_snapshots``, never by naive dict-add)."""
-        with self._stats_lock:
-            counts = dict(self.http_stats)
+        counts: Dict[str, Any] = self.http_counts()
         counts["latency_ms"] = {
             "not_modified": self.not_modified_latency.snapshot()}
         return counts

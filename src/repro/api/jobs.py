@@ -298,7 +298,7 @@ class JobManager:
                     job.state = "CANCELLED"
                     job.wall_s = 0.0
                     self.counters["cancelled"] += 1
-                    self._note_finished(job)
+                    self._note_finished_locked(job)
                     self._persist(job, force=True)
                     return job.public()
                 if job.state == "RUNNING":
@@ -379,28 +379,33 @@ class JobManager:
             except JobCancelled:
                 self._finish(job, "CANCELLED")
             except ApiError as e:
-                job.error = f"{e.code}: {e.message}"
-                self._finish(job, "FAILED")
+                self._finish(job, "FAILED", error=f"{e.code}: {e.message}")
             except Exception as e:  # noqa: BLE001 — executor must survive
-                job.error = f"{type(e).__name__}: {e}"
-                self._finish(job, "FAILED")
+                self._finish(job, "FAILED", error=f"{type(e).__name__}: {e}")
             else:
-                job.rows = rows
-                job.summary = summary
-                job.total = len(rows)
-                job.progress = 1.0
+                # publish the result fields under the lock: status() reads
+                # them through public() and must never see DONE-in-progress
+                # state (e.g. progress 1.0 with rows still unset)
+                with self._lock:
+                    job.rows = rows
+                    job.summary = summary
+                    job.total = len(rows)
+                    job.progress = 1.0
                 self._persist_rows(job)
                 self._finish(job, "DONE")
 
-    def _finish(self, job: _Job, state: str) -> None:
+    def _finish(self, job: _Job, state: str,
+                error: Optional[str] = None) -> None:
         with self._lock:
+            if error is not None:
+                job.error = error
             job.state = state
             if job.started_mono is not None:
                 job.wall_s = round(time.monotonic() - job.started_mono, 4)
             key = {"DONE": "completed", "FAILED": "failed",
                    "CANCELLED": "cancelled"}[state]
             self.counters[key] += 1
-            self._note_finished(job)
+            self._note_finished_locked(job)
             self._persist(job, force=True)
         marker = self._cancel_marker(job.job_id)
         if marker is not None and marker.exists():
@@ -409,9 +414,11 @@ class JobManager:
             except OSError:
                 pass
 
-    def _note_finished(self, job: _Job) -> None:
+    def _note_finished_locked(self, job: _Job) -> None:
         """Retention: keep the newest ``keep_finished`` finished jobs of
-        this process; evict (memory + shared files) beyond that."""
+        this process; evict (memory + shared files) beyond that.  Caller
+        holds ``self._lock`` (the ``_locked`` suffix is the BIO001
+        contract for that)."""
         self._finished_order.append(job.job_id)
         while len(self._finished_order) > self.keep_finished:
             victim = self._finished_order.pop(0)

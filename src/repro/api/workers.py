@@ -292,7 +292,8 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
         merged = merge_stats_wires(
             [wire] + [s["stats"] for s in siblings if s.get("stats")])
         http_counts: Dict[str, Any] = {}
-        _merge_counter_dicts(http_counts, dict(server.http_stats))
+        # locked accessor: copying the live dict races request threads
+        _merge_counter_dicts(http_counts, server.http_counts())
         for s in siblings:
             _merge_counter_dicts(http_counts, s.get("http") or {})
         # 304 latency histograms merge by bucket-adding snapshots —
@@ -330,7 +331,7 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
         _atomic_write_json(state_dir / _WORKER_STATE.format(idx=idx), {
             "idx": idx, "pid": os.getpid(), "port": server.port,
             "ts": time.time(), "adoptions": watcher.adoptions,
-            "http": dict(server.http_stats),
+            "http": server.http_counts(),
             "http_latency": {
                 "not_modified": server.not_modified_latency.snapshot()},
             "stats": to_wire(gw._handle_stats(StatsRequest())),
@@ -344,6 +345,8 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
             try:
                 dump_state()
             except Exception:
+                # a torn sibling state file or a full disk must not kill
+                # the dump loop — the next interval retries
                 pass
             # orphan guard: if the supervisor was SIGKILLed (a crashed
             # driver, a shell timeout), nothing will ever reap or stop
@@ -367,6 +370,8 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
     try:
         server.serve_forever()
     except Exception:
+        # an accept-loop crash still falls through to the cleanup below;
+        # the supervisor sees the exit and restarts the worker
         pass
     finally:
         stop_dumping.set()
@@ -374,11 +379,15 @@ def _worker_main(idx: int, registry_root: str, host: str, port: int,
         try:
             dump_state()                      # final counters for mergers
         except Exception:
+            # best-effort: losing the final counter dump only understates
+            # the pool-merged /stats, never blocks worker exit
             pass
         try:
             server.server_close()
             gw.close()
         except Exception:
+            # best-effort close on the way into os._exit — the OS reaps
+            # the socket and threads regardless
             pass
         os._exit(0)
 

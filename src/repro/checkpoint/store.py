@@ -64,6 +64,16 @@ def _atomic_write_text(path: Path, payload: str) -> None:
     os.replace(tmp, path)
 
 
+def _atomic_savez(path: Path, **arrays: np.ndarray) -> None:
+    """``np.savez_compressed`` through the tmp+``os.replace`` idiom — a
+    concurrent reader (another worker warm-starting, a peer computing a
+    delta) must never see a half-written archive.  The tmp name keeps the
+    ``.npz`` suffix so numpy doesn't append its own."""
+    tmp = path.with_name(path.name + ".tmp.npz")
+    np.savez_compressed(tmp, **arrays)
+    os.replace(tmp, path)
+
+
 def version_sort_key(version: str) -> tuple:
     """Natural/date-aware version ordering key.
 
@@ -94,7 +104,7 @@ class SnapshotStore:
     ) -> Path:
         d = self._dir(ontology, version, model)
         d.mkdir(parents=True, exist_ok=True)
-        np.savez_compressed(d / "embeddings.npz", **arrays)
+        _atomic_savez(d / "embeddings.npz", **arrays)
         if {"embeddings", "entity_ids", "labels"} <= set(arrays):
             self.save_raw_table(
                 ontology, version, model,
@@ -230,10 +240,11 @@ class SnapshotStore:
         """
         d = self._dir(ontology, version, model)
         d.mkdir(parents=True, exist_ok=True)
-        np.savez_compressed(
+        _atomic_savez(
             d / "params.npz",
             **{k: np.asarray(v) for k, v in params.items()})
-        (d / "params_vocab.json").write_text(
+        _atomic_write_text(
+            d / "params_vocab.json",
             json.dumps({k: list(map(str, v)) for k, v in vocab.items()}))
         return d
 
@@ -276,7 +287,7 @@ class SnapshotStore:
         (or keeping) the previous OBO file."""
         d = self.root / ontology / version
         d.mkdir(parents=True, exist_ok=True)
-        np.savez_compressed(
+        _atomic_savez(
             d / "graph.npz",
             entities=np.asarray(kg.entities, dtype=np.str_),
             relations=np.asarray(kg.relations, dtype=np.str_),
@@ -284,7 +295,7 @@ class SnapshotStore:
         )
         terms = [[m.identifier, m.label, m.namespace, bool(m.obsolete),
                   m.definition] for m in kg.terms.values()]
-        (d / "graph_terms.json").write_text(json.dumps(terms))
+        _atomic_write_text(d / "graph_terms.json", json.dumps(terms))
         return d
 
     def load_graph(self, ontology: str, version: str):

@@ -2,7 +2,7 @@
 
 [arXiv:2410.05355]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig, SSMConfig
 
 CONFIG = ArchConfig(
     arch_id="falcon-mamba-7b", family="ssm",

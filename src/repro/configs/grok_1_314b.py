@@ -2,7 +2,7 @@
 
 [hf:xai-org/grok-1]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig, MoEConfig
 
 CONFIG = ArchConfig(
     arch_id="grok-1-314b", family="moe",

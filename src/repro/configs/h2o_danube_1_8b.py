@@ -2,7 +2,7 @@
 
 [arXiv:2401.16818]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig
 
 CONFIG = ArchConfig(
     arch_id="h2o-danube-1.8b", family="dense",

@@ -3,7 +3,6 @@
 HP [Köhler et al., NAR 2021]: >18 000 classes, a pure-is_a DAG, releases
 every ~1-2 months via GitHub. Same six models, dim=200, 100 epochs.
 """
-import dataclasses
 
 from repro.ontology.synthetic import HP_SPEC
 from repro.kge.train import TrainConfig

@@ -2,7 +2,7 @@
 
 [arXiv:2403.17297]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig
 
 CONFIG = ArchConfig(
     arch_id="internlm2-20b", family="dense",

@@ -2,7 +2,7 @@
 
 [hf:llava-hf/llava-v1.6-mistral-7b-hf scaled to the 34B variant (Nous-Hermes-2-Yi-34B backbone)]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig
 
 CONFIG = ArchConfig(
     arch_id="llava-next-34b", family="vlm",

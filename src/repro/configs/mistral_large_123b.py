@@ -2,7 +2,7 @@
 
 [hf:mistralai/Mistral-Large-Instruct-2407]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig
 
 CONFIG = ArchConfig(
     arch_id="mistral-large-123b", family="dense",

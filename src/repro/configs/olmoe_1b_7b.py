@@ -2,7 +2,7 @@
 
 [arXiv:2409.02060]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig, MoEConfig
 
 CONFIG = ArchConfig(
     arch_id="olmoe-1b-7b", family="moe",

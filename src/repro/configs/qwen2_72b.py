@@ -2,7 +2,7 @@
 
 [arXiv:2407.10671]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig
 
 CONFIG = ArchConfig(
     arch_id="qwen2-72b", family="dense",

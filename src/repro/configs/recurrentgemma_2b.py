@@ -2,7 +2,7 @@
 
 [arXiv:2402.19427]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig, HybridConfig
 
 CONFIG = ArchConfig(
     arch_id="recurrentgemma-2b", family="hybrid",

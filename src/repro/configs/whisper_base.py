@@ -2,7 +2,7 @@
 
 [arXiv:2212.04356]
 """
-from repro.models.config import ArchConfig, MoEConfig, SSMConfig, HybridConfig
+from repro.models.config import ArchConfig
 
 CONFIG = ArchConfig(
     arch_id="whisper-base", family="audio",

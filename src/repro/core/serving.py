@@ -789,6 +789,8 @@ class Ticket:
         try:
             fn(self)
         except Exception:
+            # swallowing is the add_done_callback contract: a broken
+            # callback must not poison the flush loop that resolved us
             pass
 
     def _fire_callbacks(self) -> None:
@@ -942,8 +944,10 @@ class BatchScheduler:
             self.start()
 
     # ------------------------------ intake ------------------------------ #
-    def _record_errors(self, errors: Dict[int, str]) -> None:
-        """Merge under lock, keeping only the most recent max_errors."""
+    def _record_errors_locked(self, errors: Dict[int, str]) -> None:
+        """Merge into the error ring, keeping only the most recent
+        ``max_errors``.  Caller holds ``self._lock`` (the ``_locked``
+        suffix is the BIO001 contract for that)."""
         self.errors.update(errors)
         self.stats["failed"] += len(errors)
         while len(self.errors) > self.max_errors:
@@ -956,7 +960,7 @@ class BatchScheduler:
                           code: Optional[str] = None,
                           details: Optional[Dict] = None) -> Ticket:
         with self._lock:
-            self._record_errors({ticket.id: msg})
+            self._record_errors_locked({ticket.id: msg})
             if ticket._reject(msg, code, details):
                 self.stats["resolved"] += 1
                 self._observe_latency(ticket)
@@ -1184,7 +1188,7 @@ class BatchScheduler:
                 for ticket, _ in items:
                     reject(ticket, f"scheduler internal error: {e}")
         with self._lock:
-            self._record_errors(errors)
+            self._record_errors_locked(errors)
             self.stats["batches"] += n_batches
             self.stats["sim_batches"] += n_sim
             self.stats["padded_queries"] += n_padded
@@ -1209,7 +1213,7 @@ class BatchScheduler:
                         dropped[ticket.id] = msg
                         self._observe_latency(ticket)
             with self._lock:
-                self._record_errors(dropped)
+                self._record_errors_locked(dropped)
                 self.stats["resolved"] += len(dropped)
             return {}
 

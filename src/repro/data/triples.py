@@ -2,7 +2,7 @@
 batches, host-side numpy (cheap) feeding jit'd steps."""
 from __future__ import annotations
 
-from typing import Iterator, Tuple
+from typing import Iterator
 
 import numpy as np
 

@@ -15,7 +15,6 @@ rescaled per kv block — the (Sq, Skv) logit matrix never exists in HBM.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

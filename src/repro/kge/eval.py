@@ -6,7 +6,7 @@ known true triples filtered out, matching PyKEEN's RankBasedEvaluator
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import numpy as np
 import jax.numpy as jnp

@@ -30,9 +30,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 REPO = Path(__file__).resolve().parents[3]
 sys.path.insert(0, str(REPO))
 
-from benchmarks.roofline import (ICI_BW, analyze_hlo, collective_summary,
-                                 memory_traffic_proxy, model_flops,
-                                 roofline_terms)
+from benchmarks.roofline import (
+    analyze_hlo, memory_traffic_proxy, model_flops, roofline_terms)
 from repro.configs.shapes import SHAPES, applicable
 from repro.launch.mesh import make_production_mesh
 from repro.models import ARCH_IDS, build, get_config

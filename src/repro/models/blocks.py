@@ -23,8 +23,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import (chunked_attention, decode_attention, plain_attention,
-                        swa_attention)
+from .attention import chunked_attention, decode_attention, swa_attention
 from .config import ArchConfig
 from .layers import apply_norm, dense, dense_init, mlp, mlp_init, norm_init, rope_qk
 

@@ -5,15 +5,13 @@ which is also the beyond-paper long_500k override for other dense archs.
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
 from . import blocks
-from .config import ArchConfig
 from .layers import stacked_init
-from .lm import BaseLM, scan_decode, scan_layers, scan_prefill
+from .lm import BaseLM, scan_layers, scan_prefill
 
 
 def _maybe_seq_shard(h, cfg):

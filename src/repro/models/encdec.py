@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from . import blocks
 from .config import ArchConfig
 from .layers import apply_norm, dense, mlp, mlp_init, norm_init, stacked_init
-from .lm import BaseLM, embed_init, maybe_remat, scan_decode, scan_layers, scan_prefill, xent
+from .lm import BaseLM, embed_init, scan_decode, scan_layers, xent
 
 Params = Dict[str, Any]
 

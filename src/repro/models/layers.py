@@ -7,7 +7,7 @@ and consumed by ``jax.lax.scan`` in the model modules.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ wraps the scan body in ``jax.checkpoint``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax

@@ -5,9 +5,8 @@ import jax
 import jax.numpy as jnp
 
 from . import blocks
-from .config import ArchConfig
 from .layers import stacked_init
-from .lm import BaseLM, scan_decode, scan_layers, scan_prefill
+from .lm import BaseLM, scan_layers, scan_prefill
 
 
 class MoELM(BaseLM):

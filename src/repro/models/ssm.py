@@ -10,7 +10,6 @@ import jax
 import jax.numpy as jnp
 
 from . import blocks
-from .config import ArchConfig
 from .layers import norm_init, apply_norm, stacked_init
 from .lm import BaseLM, maybe_remat, scan_decode, scan_layers
 

@@ -5,14 +5,12 @@ These are the functions the launcher jits. Shapes come from
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from ..optim import adam
-from .config import ArchConfig
 from .lm import BaseLM
 
 Params = Dict[str, Any]

@@ -12,7 +12,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .config import ArchConfig
 from .dense import DenseLM
 from .lm import xent
 from .layers import apply_norm

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, Tuple
+from typing import Tuple
 
 from .config import ArchConfig
 from .dense import DenseLM

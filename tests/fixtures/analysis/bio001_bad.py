@@ -1,0 +1,16 @@
+"""BIO001 seeded violation: 'count' is written under the lock in one
+method and without it in another."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def reset(self):
+        self.count = 0          # unguarded write -> BIO001

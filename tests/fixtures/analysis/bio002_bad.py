@@ -1,0 +1,9 @@
+# bioan: module-scope[BIO002]
+"""BIO002 seeded violation: a state file published with a direct write
+instead of the tmp+os.replace idiom."""
+import json
+from pathlib import Path
+
+
+def persist(state_dir: Path, payload: dict) -> None:
+    (state_dir / "state.json").write_text(json.dumps(payload))  # -> BIO002

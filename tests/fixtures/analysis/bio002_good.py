@@ -1,0 +1,18 @@
+# bioan: module-scope[BIO002]
+"""BIO002 negative: the same write through the tmp+os.replace idiom."""
+import json
+import os
+from pathlib import Path
+
+
+def persist(state_dir: Path, payload: dict) -> None:
+    path = state_dir / "state.json"
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(json.dumps(payload))
+    os.replace(tmp, path)
+
+
+def _atomic_write_text(path: Path, payload: str) -> None:
+    tmp = path.with_name(path.name + ".tmp")
+    tmp.write_text(payload)
+    os.replace(tmp, path)

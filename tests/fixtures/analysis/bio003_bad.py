@@ -1,0 +1,17 @@
+"""BIO003 seeded violation: a forking module imports jax at top level
+and runs a device op in the pre-fork parent path."""
+import os
+
+import jax
+
+
+def spawn(table):
+    warm = jax.device_put(table)          # parent-side device op -> BIO003
+    pid = os.fork()
+    if pid == 0:
+        serve(warm)
+    return pid
+
+
+def serve(table):
+    raise SystemExit(0)

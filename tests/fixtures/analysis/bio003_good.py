@@ -1,0 +1,18 @@
+"""BIO003 negative: the forking module defers every jax touch into the
+post-fork child (the PR 6 pre-warm pattern: import modules in the
+parent if you must, run device ops only after the fork)."""
+import os
+
+
+def spawn(table):
+    pid = os.fork()
+    if pid == 0:
+        serve(table)
+    return pid
+
+
+def serve(table):
+    import jax
+
+    jax.device_put(table)
+    raise SystemExit(0)

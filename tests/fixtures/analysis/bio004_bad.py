@@ -1,0 +1,45 @@
+"""BIO004 seeded violations: a mini schema + route table that drifted —
+an error code missing from _LEGACY, a wire dataclass missing from
+_TYPES, a route whose handler does not exist, and a raised code with no
+HTTP status."""
+import dataclasses
+
+CODE_STATUS = {
+    "BAD_REQUEST": 400,
+    "NOT_FOUND": 404,          # -> BIO004: no _LEGACY mapping
+}
+
+_LEGACY = {
+    "BAD_REQUEST": ValueError,
+}
+
+
+@dataclasses.dataclass
+class PingRequest:
+    payload: str = ""
+
+
+@dataclasses.dataclass
+class PingResponse:            # -> BIO004: not registered in _TYPES
+    payload: str = ""
+
+
+_TYPES = {
+    PingRequest: "ping-request",
+}
+
+
+class ApiError(Exception):
+    def __init__(self, code, message):
+        self.code, self.message = code, message
+
+
+class MiniGateway:
+    def __init__(self):
+        self._routes = (
+            ("ping", ("ping",), PingRequest, self._handle_ping),
+            ("gone", ("gone",), PingRequest, self._handle_gone),  # no method
+        )
+
+    def _handle_ping(self, req):
+        raise ApiError("TEAPOT", "no status mapping")   # -> BIO004

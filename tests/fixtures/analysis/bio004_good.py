@@ -1,0 +1,43 @@
+"""BIO004 negative: the same mini schema with every map in lock-step."""
+import dataclasses
+
+CODE_STATUS = {
+    "BAD_REQUEST": 400,
+    "NOT_FOUND": 404,
+}
+
+_LEGACY = {
+    "BAD_REQUEST": ValueError,
+    "NOT_FOUND": KeyError,
+}
+
+
+@dataclasses.dataclass
+class PingRequest:
+    payload: str = ""
+
+
+@dataclasses.dataclass
+class PingResponse:
+    payload: str = ""
+
+
+_TYPES = {
+    PingRequest: "ping-request",
+    PingResponse: "ping-response",
+}
+
+
+class ApiError(Exception):
+    def __init__(self, code, message):
+        self.code, self.message = code, message
+
+
+class MiniGateway:
+    def __init__(self):
+        self._routes = (
+            ("ping", ("ping",), PingRequest, self._handle_ping),
+        )
+
+    def _handle_ping(self, req):
+        raise ApiError("NOT_FOUND", "no such thing")

@@ -1,0 +1,10 @@
+"""BIO005 seeded violation: a broad except swallowing silently, with no
+comment justifying why dropping the resolution path is safe."""
+
+
+def resolve_all(tickets):
+    for t in tickets:
+        try:
+            t.resolve()
+        except Exception:
+            pass

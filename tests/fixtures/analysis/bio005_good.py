@@ -1,0 +1,21 @@
+"""BIO005 negatives: the three accepted shapes — narrow type, a written
+justification, and an actual resolution in the handler."""
+
+
+def resolve_all(tickets):
+    for t in tickets:
+        try:
+            t.resolve()
+        except KeyError:
+            pass
+        except Exception:
+            # the drain loop re-rejects this ticket on the next pass, so
+            # dropping the first failure loses nothing
+            pass
+
+
+def reject_on_error(ticket):
+    try:
+        ticket.resolve()
+    except Exception as e:
+        ticket.reject(str(e))

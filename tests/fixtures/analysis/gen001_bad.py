@@ -1,0 +1,6 @@
+"""GEN001 seeded violation: a dead module-level binding."""
+import zlib
+
+
+def crc(data: bytes) -> int:
+    return sum(data)

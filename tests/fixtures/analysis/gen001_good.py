@@ -1,0 +1,6 @@
+"""GEN001 negative: the import is used."""
+import zlib
+
+
+def crc(data: bytes) -> int:
+    return zlib.crc32(data)

@@ -1,0 +1,5 @@
+"""GEN002 seeded violation: an f-string interpolating nothing."""
+
+
+def greet(name: str) -> str:
+    return f"hello, stranger"

@@ -1,0 +1,5 @@
+"""GEN002 negative: placeholders present (including nested specs)."""
+
+
+def greet(name: str, width: int) -> str:
+    return f"hello, {name:>{width}}"

@@ -1,0 +1,329 @@
+"""Invariant-analyzer self-tests (PR 10 tentpole).
+
+Three layers:
+
+1. Seeded-violation fixtures: for every rule, the known-bad snippet in
+   ``tests/fixtures/analysis/`` fires exactly that rule and the known-
+   good twin stays silent — the analyzer's own positive/negative gate.
+2. Machinery: suppression comments (line + file), the baseline
+   round-trip (grandfather → clean → stale detection), the CLI's
+   ``--strict`` exit codes, and the repo itself scanning clean.
+3. Regressions for the true positives the analyzer surfaced and this PR
+   fixed: jobs publishing DONE-state fields under the lock, the
+   snapshot store's fully-atomic writes, and the HTTP transport
+   counters' locked snapshot accessor.
+"""
+import json
+import shutil
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis import (all_checkers, run_analysis, write_baseline)
+from repro.analysis.__main__ import main as analysis_main
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+SRC = REPO / "src"
+
+BIO_RULES = ("BIO001", "BIO002", "BIO003", "BIO004", "BIO005")
+GEN_RULES = ("GEN001", "GEN002")
+ALL_FIXTURE_RULES = BIO_RULES + GEN_RULES
+
+
+def _scan(path: Path, **kw):
+    return run_analysis([path], root=REPO, **kw)
+
+
+# ---------------------------- rule catalogue --------------------------- #
+def test_registry_has_all_contract_rules():
+    codes = set(all_checkers())
+    assert set(ALL_FIXTURE_RULES) <= codes
+    for checker in all_checkers().values():
+        assert checker.contract, f"{checker.code} has no contract docstring"
+
+
+# ------------------------ seeded-violation gate ------------------------ #
+@pytest.mark.parametrize("rule", ALL_FIXTURE_RULES)
+def test_bad_fixture_fires_exactly_its_rule(rule):
+    report = _scan(FIXTURES / f"{rule.lower()}_bad.py")
+    fired = {f.rule for f in report.findings}
+    assert rule in fired, f"{rule} did not fire on its seeded violation"
+    assert fired == {rule}, f"cross-fire on {rule} fixture: {fired}"
+
+
+@pytest.mark.parametrize("rule", ALL_FIXTURE_RULES)
+def test_good_fixture_stays_silent(rule):
+    report = _scan(FIXTURES / f"{rule.lower()}_good.py")
+    assert report.findings == [], [
+        f"{f.rule} {f.message}" for f in report.findings]
+
+
+# ----------------------------- suppression ----------------------------- #
+def _bad_copy(tmp_path: Path, rule: str) -> Path:
+    dst = tmp_path / f"{rule.lower()}_bad.py"
+    shutil.copy(FIXTURES / f"{rule.lower()}_bad.py", dst)
+    return dst
+
+
+def test_line_suppression_silences_only_that_line(tmp_path):
+    target = _bad_copy(tmp_path, "BIO001")
+    report = _scan(target)
+    (line,) = {f.line for f in report.findings}
+    lines = target.read_text().splitlines()
+    lines[line - 1] += "  # bioan: ignore[BIO001] reset is test-only"
+    target.write_text("\n".join(lines) + "\n")
+    after = _scan(target)
+    assert after.findings == []
+    assert [f.rule for f in after.suppressed] == ["BIO001"]
+
+
+def test_line_suppression_is_rule_specific(tmp_path):
+    target = _bad_copy(tmp_path, "BIO001")
+    report = _scan(target)
+    (line,) = {f.line for f in report.findings}
+    lines = target.read_text().splitlines()
+    lines[line - 1] += "  # bioan: ignore[BIO005]"      # wrong rule
+    target.write_text("\n".join(lines) + "\n")
+    after = _scan(target)
+    assert [f.rule for f in after.findings] == ["BIO001"]
+
+
+def test_file_suppression(tmp_path):
+    target = _bad_copy(tmp_path, "GEN001")
+    text = target.read_text()
+    target.write_text("# bioan: ignore-file[GEN001]\n" + text)
+    after = _scan(target)
+    assert after.findings == [] and len(after.suppressed) == 1
+
+
+def test_bare_ignore_suppresses_every_rule(tmp_path):
+    target = _bad_copy(tmp_path, "GEN002")
+    line = next(i for i, l in enumerate(target.read_text().splitlines())
+                if "f\"" in l)
+    lines = target.read_text().splitlines()
+    lines[line] += "  # bioan: ignore"
+    target.write_text("\n".join(lines) + "\n")
+    assert _scan(target).findings == []
+
+
+# ------------------------------ baseline ------------------------------- #
+def test_baseline_round_trip_and_staleness(tmp_path):
+    target = _bad_copy(tmp_path, "BIO002")
+    baseline = tmp_path / "baseline.json"
+
+    before = _scan(target)
+    assert before.findings, "seeded violation must fire to baseline it"
+    write_baseline(baseline, before.findings)
+
+    grandfathered = _scan(target, baseline=baseline)
+    assert grandfathered.findings == []
+    assert len(grandfathered.baselined) == len(before.findings)
+    assert grandfathered.stale_baseline == []
+
+    # fix the violation: every baseline entry is now stale and reported
+    shutil.copy(FIXTURES / "bio002_good.py", target)
+    fixed = _scan(target, baseline=baseline)
+    assert fixed.findings == []
+    assert fixed.baselined == []
+    assert len(fixed.stale_baseline) == len(before.findings)
+
+
+def test_baseline_survives_line_drift(tmp_path):
+    """Fingerprints exclude line numbers: prepending code must not
+    un-grandfather a baselined finding."""
+    target = _bad_copy(tmp_path, "BIO005")
+    baseline = tmp_path / "baseline.json"
+    write_baseline(baseline, _scan(target).findings)
+    target.write_text("import os  # bioan: ignore[GEN001]\n\n"
+                      + target.read_text())
+    drifted = _scan(target, baseline=baseline)
+    assert drifted.findings == []
+    assert len(drifted.baselined) == 1
+
+
+# -------------------------------- CLI ---------------------------------- #
+def _cli(*args: str, cwd: Path = REPO) -> subprocess.CompletedProcess:
+    env = {"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin:/usr/local/bin"}
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=120)
+
+
+def test_cli_strict_exits_nonzero_on_seeded_violation(tmp_path):
+    proc = _cli("--strict", str(FIXTURES / "bio003_bad.py"))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "BIO003" in proc.stdout
+
+
+def test_cli_strict_exits_zero_on_repo():
+    proc = _cli("--strict", "src")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_json_report_and_select(tmp_path):
+    out = tmp_path / "report.json"
+    proc = _cli("--select", "GEN", "--json", str(out),
+                str(FIXTURES / "gen001_bad.py"))
+    assert proc.returncode == 0          # non-strict always exits 0
+    data = json.loads(out.read_text())
+    assert data["ok"] is False
+    assert data["counts"] == {"GEN001": 1}
+    assert data["findings"][0]["fingerprint"]
+
+
+def test_cli_list_rules_in_process(capsys):
+    assert analysis_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ALL_FIXTURE_RULES:
+        assert rule in out
+
+
+def test_cli_write_baseline_round_trip(tmp_path):
+    target = _bad_copy(tmp_path, "GEN002")
+    baseline = tmp_path / "bl.json"
+    assert analysis_main(["--baseline", str(baseline), "--write-baseline",
+                          str(target)]) == 0
+    assert analysis_main(["--strict", "--baseline", str(baseline),
+                          str(target)]) == 0
+
+
+# -------------------------- repo stays clean --------------------------- #
+def test_repo_scans_clean_in_process():
+    """The acceptance gate, in-process: zero unsuppressed findings over
+    src/ — and fast enough for the smoke's < 10 s budget."""
+    report = _scan(SRC)
+    assert report.ok, "\n".join(
+        f"{f.path}:{f.line} {f.rule} {f.message}" for f in report.findings)
+    assert report.elapsed_s < 10.0
+    assert report.files > 50
+
+
+# ================= regressions for analyzer-found fixes ================ #
+def test_job_done_state_is_published_atomically(registry):
+    """BIO001 true positive (jobs.py _run_loop): result fields were
+    written after the lock was dropped, so a poller could observe
+    state == DONE with progress < 1 or rows unset.  Every DONE/RUNNING
+    observation must now be internally consistent."""
+    from repro.api import Gateway
+    from repro.core.serving import ServingEngine
+
+    rng = np.random.default_rng(3)
+    n, d = 48, 8
+    ids = [f"GO:{i:07d}" for i in range(n)]
+    registry.publish("go", "2024-01", "transe", ids,
+                     [f"t {i}" for i in range(n)],
+                     rng.standard_normal((n, d)).astype(np.float32),
+                     ontology_checksum="ck", hyperparameters={"dim": d})
+    engine = ServingEngine(registry, cache_capacity=4)
+    gateway = Gateway(engine, jobs_slab=4, jobs_yield_s=0.02)
+    try:
+        sub = gateway.submit_job("knn-join", "go", model="transe",
+                                 classes=ids, k=3)
+        torn = []
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            st = gateway.job_status(sub.job_id)
+            if st.state == "DONE":
+                if st.progress != 1.0 or st.total != n:
+                    torn.append(("DONE", st.progress, st.total))
+                break
+            time.sleep(0.001)
+        else:
+            pytest.fail("job did not finish")
+        assert torn == []
+        page = gateway.job_result(sub.job_id, limit=n)
+        assert page.total == n
+    finally:
+        gateway.close()
+
+
+def test_store_writes_are_all_atomic(registry, tmp_path):
+    """BIO002 true positives (store.py): embeddings/params/graph
+    archives and the params/graph sidecars were written in place.  All
+    publish-side writes must go tmp-first and leave no droppings."""
+    import repro.checkpoint.store as store_mod
+
+    replaced = []
+    orig = store_mod.os.replace
+
+    def spy(src, dst):
+        replaced.append(Path(dst).name)
+        return orig(src, dst)
+
+    store_mod.os.replace = spy
+    try:
+        rng = np.random.default_rng(0)
+        n, d = 12, 6
+        ids = [f"GO:{i:07d}" for i in range(n)]
+        registry.publish(
+            "go", "2024-01", "transe", ids, [f"t {i}" for i in range(n)],
+            rng.standard_normal((n, d)).astype(np.float32),
+            ontology_checksum="ck", hyperparameters={"dim": d},
+            params={"entity": rng.standard_normal((n, d))},
+            params_vocab={"entity": ids})
+
+        class _KG:
+            entities = ids
+            relations = ["is_a"]
+            triples = np.zeros((1, 3), dtype=np.int64)
+            terms = {}
+
+        registry.store.save_graph("go", "2024-01", _KG())
+    finally:
+        store_mod.os.replace = orig
+
+    for name in ("embeddings.npz", "params.npz", "params_vocab.json",
+                 "graph.npz", "graph_terms.json", "metadata.json"):
+        assert name in replaced, f"{name} was not published atomically"
+    leftovers = [p for p in (registry.store.root).rglob("*.tmp*")]
+    assert leftovers == []
+    # and the archives still round-trip
+    params, vocab = registry.get_params("go", "transe")
+    assert vocab["entity"] == ids
+    _, _, emb, _ = registry.get("go", "transe")
+    assert emb.shape == (n, d)
+
+
+def test_http_counts_accessor_is_locked_and_consistent():
+    """BIO001-adjacent true positive (workers.py): the worker state dump
+    and pool-merged /stats copied ``server.http_stats`` without the
+    stats lock.  The locked accessor must return a stable copy while
+    writers hammer the counters."""
+    from repro.api.http import GatewayHTTPServer
+
+    class _Shim:
+        _count = GatewayHTTPServer._count
+        http_counts = GatewayHTTPServer.http_counts
+
+        def __init__(self):
+            self._stats_lock = threading.Lock()
+            self.http_stats = {"requests": 0, "not_modified": 0}
+
+    srv = _Shim()
+    stop = threading.Event()
+
+    def hammer():
+        while not stop.is_set():
+            srv._count("requests")
+            srv._count("not_modified")
+
+    threads = [threading.Thread(target=hammer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(300):
+            snap = srv.http_counts()
+            assert set(snap) == {"requests", "not_modified"}
+        snap = srv.http_counts()
+        snap["requests"] = -1                 # a copy, not the live dict
+        assert srv.http_stats["requests"] >= 0
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
